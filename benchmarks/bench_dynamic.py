@@ -1,0 +1,53 @@
+"""Paper §1 motivation table: dynamic-update cost.
+
+ProbeSim (index-free): an edge update is an O(1) buffer write and the next
+query is already exact w.r.t. the new graph.  TSF: the one-way-graph index
+must be rebuilt (the paper's SLING/TSF critique).  We measure both."""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+
+from benchmarks.common import emit, timed
+from repro.core import build_oneway_index, make_params, single_source
+from repro.graph import ell_from_edges, graph_from_edges, powerlaw_graph
+from repro.graph.dynamic import insert_edges, insert_edges_ell
+
+
+def run(quick: bool = True) -> None:
+    n, m = (5_000, 50_000) if quick else (50_000, 500_000)
+    src, dst, n = powerlaw_graph(n, m, seed=0)
+    g = graph_from_edges(src, dst, n, capacity=len(src) + 4096)
+    in_deg = np.bincount(dst, minlength=n)
+    eg = ell_from_edges(src, dst, n, k_max=int(in_deg.max()) + 64)
+    rng = np.random.default_rng(1)
+
+    batch = 128
+    new_src = jax.numpy.asarray(rng.integers(0, n, batch).astype(np.int32))
+    new_dst = jax.numpy.asarray(rng.integers(0, n, batch).astype(np.int32))
+
+    _, t_ins = timed(insert_edges, g, new_src, new_dst, reps=5)
+    _, t_ins_ell = timed(insert_edges_ell, eg, new_src, new_dst, reps=5)
+    emit("dynamic/insert_coo_128", t_ins * 1e6, "index_free=true")
+    emit("dynamic/insert_ell_128", t_ins_ell * 1e6, "index_free=true")
+
+    # TSF index rebuild cost after the same update
+    _, t_rebuild = timed(build_oneway_index, jax.random.key(0), eg, r_g=50)
+    emit("dynamic/tsf_index_rebuild_rg50", t_rebuild * 1e6,
+         f"vs_insert={t_rebuild / max(t_ins, 1e-9):.0f}x")
+
+    # end-to-end: update then query (freshness costs nothing extra)
+    params = make_params(n, c=0.6, eps_a=0.1, delta=0.01,
+                         n_r_override=512 if quick else None)
+    g2 = insert_edges(g, new_src, new_dst)
+    eg2 = insert_edges_ell(eg, new_src, new_dst)
+    u = int(np.argmax(in_deg))
+    _, t_q = timed(
+        single_source, jax.random.key(0), g2, eg2, u, params, variant="telescoped"
+    )
+    emit("dynamic/query_after_update", t_q * 1e6, f"n_r={params.n_r}")
+
+
+if __name__ == "__main__":
+    run(quick=False)

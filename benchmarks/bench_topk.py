@@ -1,0 +1,88 @@
+"""Paper Figures 5-7: Precision@k / NDCG@k / Kendall tau vs query time for
+top-k queries (k=50) on small graphs, vs MC / truncated-power / TSF."""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+
+from benchmarks.common import emit, pick_query_nodes, timed
+from repro.core import (
+    build_oneway_index,
+    make_params,
+    mc_single_source,
+    simrank_power,
+    simrank_truncated_single_source,
+    single_source,
+    tsf_single_source,
+)
+from repro.core.metrics import kendall_tau, ndcg_at_k, precision_at_k
+from repro.graph import ell_from_edges, graph_from_edges, paper_dataset
+
+C = 0.6
+K = 20
+
+
+def _topk_from_est(est: np.ndarray, u: int, k: int) -> np.ndarray:
+    est = est.copy()
+    est[u] = -np.inf
+    return np.argsort(-est, kind="stable")[:k]
+
+
+def _eval(pred, truth_row, u):
+    t = truth_row.copy()
+    t[u] = -np.inf
+    true_top = np.argsort(-t, kind="stable")[: len(pred)]
+    return (
+        precision_at_k(pred, true_top),
+        ndcg_at_k(pred, np.maximum(truth_row, 0.0), true_top),
+        kendall_tau(pred, truth_row),
+    )
+
+
+def run(quick: bool = True) -> None:
+    datasets = [("wiki-vote", 0.15)] if quick else [
+        ("wiki-vote", 0.15), ("hepth", 0.1), ("as", 0.04), ("hepph", 0.03)
+    ]
+    for name, scale in datasets:
+        jax.clear_caches()  # bound XLA-CPU JIT dylib growth across shape sweeps
+        src, dst, n = paper_dataset(name, scale=scale)
+        g = graph_from_edges(src, dst, n)
+        in_deg = np.asarray(g.in_deg)
+        eg = ell_from_edges(src, dst, n, k_max=int(in_deg.max()) + 1)
+        truth = np.asarray(simrank_power(g, c=C, iters=55))
+        queries = pick_query_nodes(in_deg, 3)
+
+        systems = {}
+        params = make_params(n, c=C, eps_a=0.05, delta=0.01)
+        systems["probesim"] = lambda u: single_source(
+            jax.random.key(int(u)), g, eg, int(u), params, variant="telescoped"
+        )
+        systems["mc"] = lambda u: mc_single_source(
+            jax.random.key(int(u)), eg, np.int32(u), r=200, max_len=16,
+            sqrt_c=float(np.sqrt(C)),
+        )
+        systems["topsim_T3"] = lambda u: simrank_truncated_single_source(
+            g, int(u), c=C, iters=3
+        )
+        idx = build_oneway_index(jax.random.key(1), eg, r_g=50)
+        systems["tsf"] = lambda u: tsf_single_source(
+            jax.random.key(int(u)), idx, eg, np.int32(u), r_q=5, t=10, c=C
+        )
+
+        for sysname, fn in systems.items():
+            precs, ndcgs, taus, ts = [], [], [], []
+            for u in queries:
+                est, dt = timed(fn, u)
+                pred = _topk_from_est(np.asarray(est), int(u), K)
+                p, nd, tau = _eval(pred, truth[u], int(u))
+                precs.append(p); ndcgs.append(nd); taus.append(tau); ts.append(dt)
+            emit(
+                f"topk/{name}/{sysname}", float(np.mean(ts)) * 1e6,
+                f"P@{K}={np.mean(precs):.3f};NDCG={np.mean(ndcgs):.3f};"
+                f"tau={np.mean(taus):.3f}",
+            )
+
+
+if __name__ == "__main__":
+    run(quick=False)

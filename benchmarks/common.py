@@ -1,0 +1,34 @@
+"""Shared benchmark utilities: timed runs + CSV emission."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+import jax
+
+ROWS: list[str] = []
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    row = f"{name},{us_per_call:.1f},{derived}"
+    ROWS.append(row)
+    print(row, flush=True)
+
+
+def timed(fn, *args, reps: int = 1, **kwargs):
+    """(result, seconds/rep) with block_until_ready on jax outputs."""
+    out = fn(*args, **kwargs)  # warmup/compile
+    jax.block_until_ready(out)
+    t0 = time.time()
+    for _ in range(reps):
+        out = fn(*args, **kwargs)
+        jax.block_until_ready(out)
+    return out, (time.time() - t0) / reps
+
+
+def pick_query_nodes(in_deg: np.ndarray, k: int, seed: int = 0) -> np.ndarray:
+    """Paper protocol: uniform over nodes with nonzero in-degree."""
+    rng = np.random.default_rng(seed)
+    cand = np.where(in_deg > 0)[0]
+    return rng.choice(cand, size=min(k, len(cand)), replace=False)

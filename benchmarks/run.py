@@ -1,0 +1,46 @@
+"""Benchmark harness entry: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit).
+``--full`` runs paper-scale sweeps; default is the CPU-quick profile.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma list: abserror,topk,large,dynamic,kernels")
+    args = ap.parse_args()
+    quick = not args.full
+
+    from benchmarks import (
+        bench_abserror,
+        bench_dynamic,
+        bench_kernels,
+        bench_large,
+        bench_topk,
+    )
+
+    suites = dict(
+        abserror=bench_abserror.run,
+        topk=bench_topk.run,
+        large=bench_large.run,
+        dynamic=bench_dynamic.run,
+        kernels=bench_kernels.run,
+    )
+    chosen = args.only.split(",") if args.only else list(suites)
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    for name in chosen:
+        print(f"# suite: {name}", file=sys.stderr)
+        suites[name](quick=quick)
+    print(f"# total {time.time() - t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

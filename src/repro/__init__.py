@@ -1,0 +1,8 @@
+"""repro: ProbeSim (PVLDB'17) as a production-grade JAX framework.
+
+Scalable single-source and top-k SimRank on dynamic graphs, plus the
+multi-architecture substrate (LM transformers, GNNs, recsys) required by the
+assignment.  See DESIGN.md for the system map.
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,69 @@
+"""DeepSeek-V2-Lite 16B [arXiv:2405.04434; hf deepseek-ai/DeepSeek-V2-Lite].
+
+Assignment line: 27L d_model=2048 16H d_ff=1408 vocab=102400, MoE 64e top-6,
+MLA kv_lora=512, 2 shared experts.  (The assignment also mentions "160
+routed" — that is full V2's expert count; V2-Lite has 64 routed experts and
+the assignment's own "MoE 64e top-6" agrees, so we use 64.)
+First layer is dense (first_k_dense_replace=1, width 10944).
+"""
+from repro.configs.base import MoEConfig, TransformerConfig
+
+CONFIG = TransformerConfig(
+    name="deepseek-v2-lite-16b",
+    n_layers=27,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=16,
+    d_head=128,
+    d_ff=10944,
+    vocab=102400,
+    attention="mla",
+    kv_lora_rank=512,
+    q_lora_rank=0,
+    qk_nope_head_dim=128,
+    qk_rope_head_dim=64,
+    v_head_dim=128,
+    moe=MoEConfig(
+        n_routed=64,
+        top_k=6,
+        d_ff_expert=1408,
+        n_shared=2,
+        d_ff_shared=2816,
+        first_dense_layers=1,
+        d_ff_dense=10944,
+        norm_topk_prob=False,
+    ),
+    rope_theta=10000.0,
+)
+
+SMOKE = TransformerConfig(
+    name="deepseek-v2-lite-16b-smoke",
+    n_layers=3,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=4,
+    d_head=16,
+    d_ff=128,
+    vocab=512,
+    attention="mla",
+    kv_lora_rank=32,
+    q_lora_rank=0,
+    qk_nope_head_dim=16,
+    qk_rope_head_dim=8,
+    v_head_dim=16,
+    moe=MoEConfig(
+        n_routed=8,
+        top_k=2,
+        d_ff_expert=32,
+        n_shared=2,
+        d_ff_shared=64,
+        first_dense_layers=1,
+        d_ff_dense=128,
+        norm_topk_prob=False,
+        capacity_factor=4.0,
+    ),
+    rope_theta=10000.0,
+    param_dtype="float32",
+    compute_dtype="float32",
+    remat=False,
+)

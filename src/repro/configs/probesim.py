@@ -1,0 +1,20 @@
+"""ProbeSim serving config — the paper's own architecture.
+
+Twitter-scale graph (paper Table 3) for the dry-run; the serving step is a
+batched single-source top-k query against the node/edge-sharded graph.
+"""
+from repro.configs.base import ProbeSimConfig
+
+CONFIG = ProbeSimConfig(
+    name="probesim",
+    n=41_652_230,
+    m=1_468_365_182,
+    c=0.6,
+    eps_a=0.1,
+    delta=0.01,
+    k_max_ell=64,
+)
+SMOKE = ProbeSimConfig(
+    name="probesim-smoke", n=512, m=4096, c=0.6, eps_a=0.1, delta=0.1,
+    k_max_ell=32,
+)

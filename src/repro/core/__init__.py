@@ -1,0 +1,59 @@
+"""ProbeSim core — the paper's primary contribution in JAX.
+
+Public API:
+    make_params         error-budget accounting (Thm 1 + 2)
+    single_source       approximate single-source SimRank (Alg. 1 + §4)
+    topk                approximate top-k SimRank (Def. 2)
+    sample_walks        sqrt(c)-walk generation (Def. 3)
+    simrank_power       ground-truth Power Method (small graphs)
+    mc_single_source    Monte Carlo baseline
+    tsf_single_source   TSF baseline
+    evaluate_with_pool  pooling evaluation (§6.2)
+"""
+from repro.core.montecarlo import mc_pool_scores, mc_single_pair, mc_single_source
+from repro.core.params import ProbeSimParams, make_params
+from repro.core.pooling import build_pool, evaluate_with_pool, pooled_ground_truth
+from repro.core.power import (
+    simrank_power,
+    simrank_power_host,
+    simrank_truncated_single_source,
+)
+from repro.core.probe import (
+    estimate_walk_reference,
+    probe_prefix_reference,
+    probe_tree_levels,
+    probe_walks_telescoped,
+    push_level,
+)
+from repro.core.probesim import single_source, single_source_simple, topk
+from repro.core.tree import build_prefix_tree, tree_stats
+from repro.core.tsf import build_oneway_index, tsf_single_source
+from repro.core.walks import sample_walks, walk_lengths
+
+__all__ = [
+    "ProbeSimParams",
+    "make_params",
+    "single_source",
+    "single_source_simple",
+    "topk",
+    "sample_walks",
+    "walk_lengths",
+    "simrank_power",
+    "simrank_power_host",
+    "simrank_truncated_single_source",
+    "mc_single_pair",
+    "mc_single_source",
+    "mc_pool_scores",
+    "tsf_single_source",
+    "build_oneway_index",
+    "build_pool",
+    "evaluate_with_pool",
+    "pooled_ground_truth",
+    "build_prefix_tree",
+    "tree_stats",
+    "probe_prefix_reference",
+    "probe_walks_telescoped",
+    "probe_tree_levels",
+    "estimate_walk_reference",
+    "push_level",
+]

@@ -1,0 +1,250 @@
+"""Distributed ProbeSim — the multi-pod serving path.
+
+Layout (production mesh ("pod", "data", "model")):
+
+* graph: in-CSR offsets + in-degrees row-sharded on ``model``; the flat
+  ``indices``/COO ``src``/``dst`` edge arrays sharded over all axes (they are
+  the bulk of the footprint: m * 12 B);
+* score frontier S [n_pad, Q*B]: rows on ``model``, walk columns on
+  ``data`` (2-D sharding keeps the per-device block ~100s of MB at
+  billion-edge scale);
+* queries on ``data`` via the column dimension.
+
+This module is the *baseline* distribution: pjit + sharding constraints,
+letting the SPMD partitioner place the collectives (recorded by the
+roofline).  The §Perf hillclimb adds a manual shard_map ring variant
+(`probe_level_ring`) that pipelines the source-score exchange with the
+per-block gather/scatter compute.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.common import constrain, logical_spec, mesh_axis_names
+from repro.utils.pytree import static, struct
+
+Array = jax.Array
+
+
+@struct
+class ShardedGraph:
+    """Device-resident graph for distributed ProbeSim."""
+
+    indptr: Array  # int32 [n_pad] in-CSR start offset per node (m < 2^31;
+    #   friendster-scale (m=2.6e9) requires int64 + jax_enable_x64)
+    in_deg: Array  # int32 [n_pad]
+    indices: Array  # int32 [m_pad] in-neighbor lists (CSR values)
+    src: Array  # int32 [m_pad] COO (for the push)
+    dst: Array  # int32 [m_pad]
+    n: int = static()
+    n_pad: int = static()
+    m: int = static()
+    m_pad: int = static()
+
+    @property
+    def inv_in_deg(self) -> Array:
+        d = self.in_deg.astype(jnp.float32)
+        return jnp.where(d > 0, 1.0 / jnp.maximum(d, 1.0), 0.0)
+
+
+def build_sharded_graph(
+    src: np.ndarray, dst: np.ndarray, n: int, *, pad_nodes: int = 1,
+    pad_edges: int = 1,
+) -> ShardedGraph:
+    """Host-side constructor (also used with ShapeDtypeStruct for dry-run)."""
+    m = len(src)
+    n_pad = ((n + pad_nodes - 1) // pad_nodes) * pad_nodes
+    m_pad = ((m + pad_edges - 1) // pad_edges) * pad_edges
+    order = np.argsort(dst, kind="stable")
+    indices = np.full(m_pad, n_pad, dtype=np.int32)
+    indices[:m] = src[order]
+    in_deg = np.zeros(n_pad, dtype=np.int32)
+    cnt = np.bincount(dst, minlength=n)
+    in_deg[:n] = cnt[:n]
+    indptr = np.zeros(n_pad, dtype=np.int32)
+    np.cumsum(cnt[: n - 1], out=indptr[1:n])
+    src_p = np.full(m_pad, n_pad, dtype=np.int32)
+    dst_p = np.full(m_pad, n_pad, dtype=np.int32)
+    src_p[:m] = src
+    dst_p[:m] = dst
+    return ShardedGraph(
+        indptr=jnp.asarray(indptr),
+        in_deg=jnp.asarray(in_deg),
+        indices=jnp.asarray(indices),
+        src=jnp.asarray(src_p),
+        dst=jnp.asarray(dst_p),
+        n=n, n_pad=n_pad, m=m, m_pad=m_pad,
+    )
+
+
+def graph_specs(sg: ShardedGraph) -> ShardedGraph:
+    """PartitionSpec pytree matching ShardedGraph (static fields copied —
+    pytree treedefs include the static metadata)."""
+    tp = "model" if "model" in mesh_axis_names() else None
+    all_axes = tuple(a for a in ("pod", "data", "model") if a in mesh_axis_names())
+    return ShardedGraph(
+        indptr=P(tp),
+        in_deg=P(tp),
+        indices=P(all_axes if all_axes else None),
+        src=P(all_axes if all_axes else None),
+        dst=P(all_axes if all_axes else None),
+        n=sg.n, n_pad=sg.n_pad, m=sg.m, m_pad=sg.m_pad,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Distributed walk sampling (CSR gathers; frontier is tiny and replicated)
+# ---------------------------------------------------------------------------
+
+
+def sample_walks_sharded(
+    key: Array,
+    sg: ShardedGraph,
+    queries: Array,  # int32 [Q]
+    *,
+    walks_per_query: int,
+    max_len: int,
+    sqrt_c: float,
+) -> Array:
+    """Returns walks int32 [Q * B, max_len] (sentinel = n_pad)."""
+    Q = queries.shape[0]
+    B = walks_per_query
+    n_pad = sg.n_pad
+    cur = jnp.repeat(queries, B).astype(jnp.int32)  # [Q*B]
+    k_cont, k_pick = jax.random.split(key)
+    cont = jax.random.uniform(k_cont, (max_len - 1, Q * B)) < sqrt_c
+    pick = jax.random.uniform(k_pick, (max_len - 1, Q * B))
+
+    def step(carry, inputs):
+        cur, alive = carry
+        cont_t, pick_t = inputs
+        cc = cur.clip(0, n_pad - 1)
+        deg = sg.in_deg[cc]
+        start = sg.indptr[cc]
+        can = alive & cont_t & (deg > 0)
+        k = jnp.floor(pick_t * deg.astype(jnp.float32)).astype(jnp.int32)
+        k = k.clip(0, jnp.maximum(deg - 1, 0))
+        g = (start + k).clip(0, sg.indices.shape[0] - 1)
+        nxt = sg.indices[g]
+        nxt = jnp.where(can, nxt, n_pad)
+        return (nxt, can), nxt
+
+    (_, _), cols = jax.lax.scan(
+        step, (cur, jnp.ones(Q * B, bool)), (cont, pick)
+    )
+    return jnp.concatenate([cur[None, :], cols], axis=0).T  # [Q*B, L]
+
+
+# ---------------------------------------------------------------------------
+# Distributed telescoped probe (edge-chunked COO pushes)
+# ---------------------------------------------------------------------------
+
+
+def _push_chunked(
+    sg: ShardedGraph, scores: Array, sqrt_c: float, edge_chunks: int
+) -> Array:
+    """scores [rows_total, C] -> pushed [rows_total, C] over edge chunks."""
+    n_pad = sg.n_pad
+    C = scores.shape[1]
+    m_pad = sg.m_pad
+    assert m_pad % edge_chunks == 0
+    mc = m_pad // edge_chunks
+    src = sg.src.reshape(edge_chunks, mc)
+    dst = sg.dst.reshape(edge_chunks, mc)
+
+    # python loop (not lax.scan): cost_analysis counts loop bodies once,
+    # and the dry-run's flop/collective numbers must see every chunk
+    rows_total = scores.shape[0]
+    acc = jnp.zeros_like(scores)
+    for ci in range(edge_chunks):
+        msgs = scores[src[ci].clip(0, n_pad)]  # [mc, C]; sentinel row zero
+        msgs = constrain(msgs, "tp", "dp")
+        acc = acc + jax.ops.segment_sum(
+            msgs, dst[ci], num_segments=rows_total
+        )
+    w = jnp.concatenate([
+        sg.inv_in_deg,
+        jnp.zeros((rows_total - n_pad,), jnp.float32),
+    ]) * sqrt_c
+    return acc * w[:, None]
+
+
+def probe_walks_sharded(
+    sg: ShardedGraph,
+    walks: Array,  # [C, L] (C = Q*B columns)
+    *,
+    sqrt_c: float,
+    eps_p: float = 0.0,
+    edge_chunks: int = 8,
+) -> Array:
+    """Telescoped batched probe with 2-D-sharded scores; returns [n_pad, C].
+
+    Injections and exclusion masks are *broadcast-compare* arithmetic (a row
+    iota against the per-column walk node), not scatters: elementwise ops
+    partition trivially under 2-D sharding, where (row, col)-indexed scatters
+    trip the SPMD partitioner and serialize on TPU.
+    The score matrix carries one extra padding row-block; row ``n_pad`` is
+    the sentinel dump row (always zero)."""
+    n_pad = sg.n_pad
+    C, L = walks.shape
+    rows_total = n_pad + _row_pad(sg)
+    rows = jax.lax.broadcasted_iota(jnp.int32, (rows_total, C), 0)
+    scores = jnp.zeros((rows_total, C), jnp.float32)
+    scores = constrain(scores, "tp", "dp")
+    for p in range(L, 1, -1):
+        u_p = walks[:, p - 1]  # sentinel (>= n_pad) never matches a live row
+        u_prev = walks[:, p - 2]
+        scores = scores + (rows == u_p[None, :]).astype(jnp.float32)
+        if eps_p > 0.0:
+            thresh = eps_p / (sqrt_c ** (p - 1))
+            scores = jnp.where(scores > thresh, scores, 0.0)
+        scores = _push_chunked(sg, scores, sqrt_c, edge_chunks)
+        scores = jnp.where(rows == u_prev[None, :], 0.0, scores)
+        scores = constrain(scores, "tp", "dp")
+    return scores[:n_pad]
+
+
+def _row_pad(sg: ShardedGraph) -> int:
+    """Extra score rows so (n_pad + pad) stays mesh-divisible; >= 1 so the
+    sentinel row n_pad exists."""
+    from repro.models.common import axis_size
+
+    block = max(axis_size("tp"), 1)
+    return block - (sg.n_pad % block) if sg.n_pad % block else block
+
+
+def make_serve_step(cfg, *, queries: int, walk_chunk: int, max_len: int,
+                    top_k: int = 50, edge_chunks: int = 8):
+    """Build the jit-able ProbeSim serving step for the production mesh.
+
+    step(graph, query_nodes [Q], key) -> (topk_idx [Q, k], topk_val [Q, k])
+    One step processes `walk_chunk` walks per query; the serving engine loops
+    steps, folding results (estimates are means over walk chunks).
+    """
+    import math
+
+    sqrt_c = math.sqrt(cfg.c)
+
+    def serve_step(sg: ShardedGraph, query_nodes: Array, key: Array):
+        walks = sample_walks_sharded(
+            key, sg, query_nodes, walks_per_query=walk_chunk,
+            max_len=max_len, sqrt_c=sqrt_c,
+        )
+        scores = probe_walks_sharded(
+            sg, walks, sqrt_c=sqrt_c, edge_chunks=edge_chunks
+        )  # [n_pad, Q*B]
+        est = scores.reshape(sg.n_pad, queries, walk_chunk).sum(-1) / walk_chunk
+        est = constrain(est, "tp", None)
+        # exclude the query nodes themselves (compare, not scatter)
+        rows = jax.lax.broadcasted_iota(jnp.int32, est.shape, 0)
+        est = jnp.where(rows == query_nodes[None, :], -jnp.inf, est)
+        vals, idx = jax.lax.top_k(est.T, top_k)  # [Q, k]
+        return idx, vals
+
+    return serve_step

@@ -1,0 +1,125 @@
+"""Monte Carlo SimRank baselines (Fogaras & Racz; paper §2.2).
+
+* ``mc_single_pair`` — the pooling "expert": estimate s(u, v) by sampling r
+  pairs of sqrt(c)-walks and counting meets.  r >= 1/(2 eps^2) ln(2/delta)
+  gives |err| <= eps w.p. 1-delta; the paper's pooling uses eps = 1e-4-ish
+  precision with very large r (we expose r directly).
+
+* ``mc_single_source`` — the index-free MC baseline the paper compares
+  against: sample r walks from *every* node, estimate s(u, v) as the meet
+  frequency between u's walks and v's walks (pairing walk i of u with walk i
+  of v, the unbiased coupling used in [6]).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.walks import sample_walks
+from repro.graph.structs import EllGraph
+
+Array = jax.Array
+
+
+@partial(jax.jit, static_argnames=("r", "max_len", "sqrt_c"))
+def mc_single_pair(
+    key: Array,
+    eg: EllGraph,
+    u: Array,
+    v: Array,
+    *,
+    r: int,
+    max_len: int,
+    sqrt_c: float,
+) -> Array:
+    """Estimate s(u, v) from r independent sqrt(c)-walk pairs."""
+    ku, kv = jax.random.split(key)
+    wu = sample_walks(ku, eg, u, n_r=r, max_len=max_len, sqrt_c=sqrt_c)
+    wv = sample_walks(kv, eg, v, n_r=r, max_len=max_len, sqrt_c=sqrt_c)
+    same = (wu == wv) & (wu < eg.n)
+    meet = same.any(axis=1)
+    return meet.mean()
+
+
+@partial(jax.jit, static_argnames=("r", "max_len", "sqrt_c", "batch"))
+def mc_pool_scores(
+    key: Array,
+    eg: EllGraph,
+    u: Array,
+    pool: Array,  # int32 [P] candidate nodes
+    *,
+    r: int,
+    max_len: int,
+    sqrt_c: float,
+    batch: int = 64,
+) -> Array:
+    """Single-pair MC scores s(u, v) for every v in the pool (the 'expert')."""
+    ku, kv = jax.random.split(key)
+    wu = sample_walks(ku, eg, u, n_r=r, max_len=max_len, sqrt_c=sqrt_c)
+
+    def one(carry, v):
+        kv2 = jax.random.fold_in(kv, v)
+        wv = sample_walks(kv2, eg, v, n_r=r, max_len=max_len, sqrt_c=sqrt_c)
+        same = (wu == wv) & (wu < eg.n)
+        return carry, same.any(axis=1).mean()
+
+    _, scores = jax.lax.scan(one, 0, pool)
+    return scores
+
+
+@partial(jax.jit, static_argnames=("r", "max_len", "sqrt_c"))
+def mc_single_source(
+    key: Array,
+    eg: EllGraph,
+    u: Array,
+    *,
+    r: int,
+    max_len: int,
+    sqrt_c: float,
+) -> Array:
+    """MC single-source baseline: walks from ALL nodes; s~(u, v) [n].
+
+    Memory/time O(n * r): this is the 'considerable query overhead' method
+    the paper improves on — implemented for the Figure-4 comparison.
+    """
+    n = eg.n
+    ku, kv = jax.random.split(key)
+    wu = sample_walks(ku, eg, u, n_r=r, max_len=max_len, sqrt_c=sqrt_c)
+
+    # walks from every node: [n, r, L] is too big; scan over trial index
+    def trial(carry, t):
+        total = carry
+        kt = jax.random.fold_in(kv, t)
+        k_cont, k_step = jax.random.split(kt)
+        cur = jnp.arange(n, dtype=jnp.int32)  # one walk per node
+        meet = jnp.zeros(n, dtype=bool)
+        uw = wu[t]
+
+        def step(c, inputs):
+            cur, meet, alive = c
+            p, (cont, pick) = inputs
+            # compare at position p
+            meet = meet | (alive & (cur == uw[p]) & (uw[p] < n))
+            deg = eg.in_deg[cur.clip(0, n - 1)]
+            can = alive & cont & (deg > 0)
+            kk = jnp.floor(pick * deg.astype(jnp.float32)).astype(jnp.int32)
+            kk = kk.clip(0, jnp.maximum(deg - 1, 0))
+            nxt = jnp.where(can, eg.in_nbrs[cur.clip(0, n - 1), kk], n)
+            return (nxt, meet, can), None
+
+        L = wu.shape[1]
+        cont = jax.random.uniform(k_cont, (L, n)) < sqrt_c
+        pick = jax.random.uniform(k_step, (L, n))
+        # position 0: both walks at their start; meet iff v == u handled via cur==uw[0]
+        (cur, meet, _), _ = jax.lax.scan(
+            step,
+            (cur, jnp.zeros(n, bool), jnp.ones(n, bool)),
+            (jnp.arange(L), (cont, pick)),
+        )
+        return total + meet.astype(jnp.float32), None
+
+    total, _ = jax.lax.scan(trial, jnp.zeros(n, jnp.float32), jnp.arange(r))
+    est = total / r
+    return est.at[u].set(1.0)

@@ -1,0 +1,224 @@
+"""PROBE — the paper's deterministic reverse-push (Alg. 2) on dense frontiers.
+
+Two implementations:
+
+* ``probe_prefix_reference`` — literal Algorithm 2 for one walk prefix.
+  O(i) push levels per prefix, so Alg. 1 costs O(l^2) pushes per walk.
+  Used as the correctness oracle (it reproduces the paper's worked example
+  digit-for-digit) and in tests.
+
+* ``probe_walks_telescoped`` — the TPU-native batched form.  One PROBE push
+  level is the *linear* operator  T_p(s) = mask_{u_{p-1}}(M s)  with
+  M[v, x] = sqrt(c)/|I(v)| for x in I(v).  Alg. 1's per-walk sum of
+  per-prefix probes factors through linearity:
+
+      sum_{i=2..l} (T_2 ∘ ... ∘ T_i)(e_{u_i})
+        = T_2( e_{u_2} + T_3( e_{u_3} + ... T_l(e_{u_l}) ... ) )
+
+  so one walk costs l-1 pushes instead of O(l^2) — exactly equal in value
+  (verified against the reference to 1e-6 in tests).  A batch of B walks is
+  processed as a score matrix S[n+1, B] (row n = sentinel dump row), one
+  batched SpMM per level.
+
+Pruning rule 2 appears as a per-level threshold: an entry at position p will
+undergo p-1 more pushes, each scaling by <= sqrt(c), so entries with
+``score * sqrt(c)^(p-1) <= eps_p`` are dropped (same one-sided error bound as
+the paper, Lemma 6; pruning the *summed* telescoped vector is strictly more
+conservative than per-prefix pruning, see DESIGN.md).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.graph.structs import EllGraph, Graph, push_coo, push_ell
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# One push level
+# ---------------------------------------------------------------------------
+
+
+def push_level(
+    g: Graph | EllGraph,
+    scores: Array,
+    sqrt_c: float,
+    *,
+    use_kernel: bool = False,
+) -> Array:
+    """new[v] = sqrt(c)/|I(v)| * sum_{x in I(v)} scores[x];  scores [n] or [n,B]."""
+    w = g.inv_in_deg * sqrt_c
+    if isinstance(g, EllGraph):
+        if use_kernel:
+            from repro.kernels.spmm_ell import ops as spmm_ops
+
+            return spmm_ops.spmm_ell(g.in_nbrs, scores, w)
+        return push_ell(g, scores, weights=w)
+    return push_coo(g, scores, weights=w)
+
+
+# ---------------------------------------------------------------------------
+# Reference: literal Algorithm 2
+# ---------------------------------------------------------------------------
+
+
+def probe_prefix_reference(
+    g: Graph | EllGraph,
+    prefix: Array,
+    sqrt_c: float,
+    eps_p: float = 0.0,
+) -> Array:
+    """Deterministic PROBE of one partial walk ``prefix`` = (u_1, ..., u_i).
+
+    Returns Score [n] = first-meeting probability of every v w.r.t. prefix.
+    ``prefix`` is a concrete 1-D int array (host loop — oracle only).
+    """
+    prefix = jnp.asarray(prefix)
+    i = int(prefix.shape[0])
+    n = g.n
+    scores = jnp.zeros(n, dtype=jnp.float32).at[prefix[i - 1]].set(1.0)
+    for j in range(i - 1):
+        if eps_p > 0.0:
+            # remaining pushes after this one: i-1 - j - 1 = i - j - 2;
+            # rule applies *before descending* from H_j: score * sqrt_c^(i-j-1)
+            thresh = eps_p / (sqrt_c ** (i - j - 1))
+            scores = jnp.where(scores > thresh, scores, 0.0)
+        scores = push_level(g, scores, sqrt_c)
+        # exclusion: no score lands on u_{i-j-1}
+        scores = scores.at[prefix[i - j - 2]].set(0.0)
+    return scores
+
+
+def estimate_walk_reference(
+    g: Graph | EllGraph,
+    walk: Array,
+    sqrt_c: float,
+    eps_p: float = 0.0,
+) -> Array:
+    """s~_k for one walk (Alg. 1 inner loop): sum of probes over prefixes."""
+    walk = jnp.asarray(walk)
+    n = g.n
+    live = int((walk < n).sum())
+    total = jnp.zeros(n, dtype=jnp.float32)
+    for i in range(2, live + 1):
+        total = total + probe_prefix_reference(g, walk[:i], sqrt_c, eps_p)
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Telescoped batched probe
+# ---------------------------------------------------------------------------
+
+
+@partial(
+    jax.jit,
+    static_argnames=("sqrt_c", "eps_p", "max_len", "use_kernel"),
+)
+def probe_walks_telescoped(
+    g: Graph | EllGraph,
+    walks: Array,  # int32 [B, max_len], sentinel = n
+    *,
+    sqrt_c: float,
+    eps_p: float = 0.0,
+    max_len: int | None = None,
+    use_kernel: bool = False,
+) -> Array:
+    """Batched telescoped probe.  Returns per-walk estimates [n, B].
+
+    Column k equals  sum_{i=2..l_k} Score(., W_k(u, i))  — the complete inner
+    loop of Algorithm 1 for walk k.
+    """
+    n = g.n
+    B, L = walks.shape
+    if max_len is not None:
+        L = max_len
+    cols = jnp.arange(B)
+    scores = jnp.zeros((n, B), dtype=jnp.float32)
+
+    def level(p, scores):
+        # p runs L .. 2 (1-indexed walk positions)
+        u_p = walks[:, p - 1]  # node at position p (sentinel n if dead)
+        u_prev = walks[:, p - 2]  # mask node at position p-1 (always live if p>=2... guarded anyway)
+        valid = u_p < n
+        # inject e_{u_p}
+        scores = scores.at[u_p.clip(0, n - 1), cols].add(
+            valid.astype(scores.dtype)
+        )
+        # pruning rule 2: entries at position p face p-1 more pushes
+        if eps_p > 0.0:
+            thresh = eps_p / (sqrt_c ** (p - 1))
+            scores = jnp.where(scores > thresh, scores, 0.0)
+        # push
+        scores = push_level(g, scores, sqrt_c, use_kernel=use_kernel)
+        # exclusion mask at position p-1
+        prev_ok = u_prev < n
+        scores = scores.at[u_prev.clip(0, n - 1), cols].set(
+            jnp.where(prev_ok, 0.0, scores[u_prev.clip(0, n - 1), cols])
+        )
+        return scores
+
+    # unrolled python loop over a static L keeps each level's eps_p threshold
+    # a compile-time constant (XLA fuses the mask chain); L is small (<= ~16).
+    for p in range(L, 1, -1):
+        scores = level(p, scores)
+    return scores
+
+
+@partial(jax.jit, static_argnames=("sqrt_c", "eps_p", "use_kernel"))
+def probe_tree_levels(
+    g: Graph | EllGraph,
+    level_nodes: tuple[Array, ...],  # per depth d: int32 [W_d] graph node ids
+    level_weights: tuple[Array, ...],  # per depth d: float32 [W_d] (walk counts)
+    level_parent: tuple[Array, ...],  # per depth d: int32 [W_d] parent col at d-1
+    level_parent_node: tuple[Array, ...],  # per depth d: int32 [W_d] parent graph node
+    *,
+    sqrt_c: float,
+    eps_p: float = 0.0,
+    use_kernel: bool = False,
+) -> Array:
+    """Batch algorithm (paper Alg. 3) + telescoping over the prefix tree.
+
+    Levels are ordered deepest-first; depth 0 entries are the children of the
+    root (position 2 in walk coordinates).  Column widths W_d are static.
+    Each level: inject weights, prune, push, mask at the parent's graph node,
+    then merge children columns into parent columns (segment-sum).
+    Returns the summed estimate vector [n] (divide by n_r outside).
+    """
+    n = g.n
+    depths = len(level_nodes)
+    carry = None  # [n, W_d] for current deepest level
+    for d in range(depths - 1, -1, -1):
+        nodes = level_nodes[d]
+        W = nodes.shape[0]
+        # walk-coordinate position of depth d is p = d + 2
+        inject = jnp.zeros((n, W), jnp.float32).at[
+            nodes.clip(0, n - 1), jnp.arange(W)
+        ].add(jnp.where(nodes < n, level_weights[d], 0.0))
+        scores = inject if carry is None else carry + inject
+        if eps_p > 0.0:
+            # position p = d + 2 -> p+1 pushes remain. Columns hold *sums*
+            # over shared-prefix walks; pruning the sum at the per-walk
+            # threshold is strictly more conservative than per-walk pruning
+            # (each walk's share <= the sum), so Lemma 6's bound still holds.
+            thresh = eps_p / (sqrt_c ** (d + 1))
+            scores = jnp.where(scores > thresh, scores, 0.0)
+        scores = push_level(g, scores, sqrt_c, use_kernel=use_kernel)
+        # mask at parent's graph node, per column
+        pn = level_parent_node[d]
+        ok = pn < n
+        scores = scores.at[pn.clip(0, n - 1), jnp.arange(W)].set(
+            jnp.where(ok, 0.0, scores[pn.clip(0, n - 1), jnp.arange(W)])
+        )
+        # merge into parent columns
+        if d > 0:
+            W_parent = level_nodes[d - 1].shape[0]
+            carry = jax.ops.segment_sum(
+                scores.T, level_parent[d], num_segments=W_parent
+            ).T
+        else:
+            carry = scores.sum(axis=1, keepdims=True)
+    return carry[:, 0]

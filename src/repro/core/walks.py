@@ -1,0 +1,64 @@
+"""Vectorized sqrt(c)-walk generation (paper Def. 3).
+
+A sqrt(c)-walk from u follows a uniformly random **in**-neighbor at each step
+and terminates with probability 1 - sqrt(c) per step (or at a node with no
+in-neighbors).  We generate a batch of walks as a dense int32 matrix
+``walks[n_r, max_len]`` with ``walks[:, 0] = u`` and sentinel ``n`` after
+termination.  Walks are truncated at ``max_len`` = l_t (Pruning rule 1).
+
+Sampling uses the ELL in-neighbor table: next = in_nbrs[v, floor(r * deg(v))].
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.graph.structs import EllGraph
+
+Array = jax.Array
+
+
+@partial(jax.jit, static_argnames=("n_r", "max_len", "sqrt_c"))
+def sample_walks(
+    key: Array,
+    eg: EllGraph,
+    u: Array,
+    *,
+    n_r: int,
+    max_len: int,
+    sqrt_c: float,
+) -> Array:
+    """Sample ``n_r`` sqrt(c)-walks from node ``u``.
+
+    Returns int32 [n_r, max_len]; walks[:, 0] == u; sentinel = n.
+    """
+    n = eg.n
+    k_cont, k_step = jax.random.split(key)
+    # continue/stop coin per (walk, step): continue w.p. sqrt(c)
+    cont = jax.random.uniform(k_cont, (n_r, max_len - 1)) < sqrt_c
+    pick = jax.random.uniform(k_step, (n_r, max_len - 1))
+
+    def step(carry, inputs):
+        cur, alive = carry  # cur: [n_r] current node; alive: [n_r] bool
+        cont_t, pick_t = inputs
+        deg = eg.in_deg[cur.clip(0, n - 1)]
+        can_move = alive & cont_t & (deg > 0)
+        k = jnp.floor(pick_t * deg.astype(jnp.float32)).astype(jnp.int32)
+        k = k.clip(0, jnp.maximum(deg - 1, 0))
+        nxt = eg.in_nbrs[cur.clip(0, n - 1), k]
+        nxt = jnp.where(can_move, nxt, n)
+        return (nxt, can_move), nxt
+
+    u_col = jnp.broadcast_to(jnp.asarray(u, jnp.int32), (n_r,))
+    (_, _), cols = jax.lax.scan(
+        step, (u_col, jnp.ones(n_r, dtype=bool)), (cont.T, pick.T)
+    )
+    walks = jnp.concatenate([u_col[:, None], cols.T], axis=1)
+    return walks.astype(jnp.int32)
+
+
+def walk_lengths(walks: Array, n: int) -> Array:
+    """Number of live nodes per walk (l in the paper)."""
+    return (walks < n).sum(axis=1).astype(jnp.int32)

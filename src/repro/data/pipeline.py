@@ -1,0 +1,55 @@
+"""Host data pipeline: background prefetch + device put, deterministic cursor.
+
+Double-buffered: batch t+1 is generated (and transferred) while step t
+computes — the standard input-pipeline/compute overlap."""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Callable, Iterator
+
+import jax
+
+
+class PrefetchPipeline:
+    def __init__(
+        self,
+        make_batch: Callable[[int], dict],  # step -> host batch
+        start_step: int = 0,
+        prefetch: int = 2,
+        sharding=None,
+    ):
+        self._make = make_batch
+        self._q: queue.Queue = queue.Queue(maxsize=prefetch)
+        self._step = start_step
+        self._sharding = sharding
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def _worker(self):
+        step = self._step
+        while not self._stop.is_set():
+            batch = self._make(step)
+            if self._sharding is not None:
+                batch = jax.device_put(batch, self._sharding)
+            try:
+                self._q.put((step, batch), timeout=1.0)
+            except queue.Full:
+                if self._stop.is_set():
+                    return
+                continue
+            step += 1
+
+    def __iter__(self) -> Iterator[tuple[int, dict]]:
+        while not self._stop.is_set():
+            yield self._q.get()
+
+    def close(self):
+        self._stop.set()
+        try:
+            while True:
+                self._q.get_nowait()
+        except queue.Empty:
+            pass
+        self._thread.join(timeout=2.0)

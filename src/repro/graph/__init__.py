@@ -1,0 +1,37 @@
+from repro.graph.structs import (
+    CsrGraph,
+    EllGraph,
+    Graph,
+    csr_from_edges,
+    ell_from_edges,
+    graph_from_edges,
+    graph_to_host_edges,
+    push_coo,
+    push_ell,
+)
+from repro.graph.generators import (
+    TOY_TABLE2,
+    bipartite_graph,
+    erdos_renyi_graph,
+    paper_dataset,
+    powerlaw_graph,
+    toy_graph,
+)
+
+__all__ = [
+    "CsrGraph",
+    "EllGraph",
+    "Graph",
+    "csr_from_edges",
+    "ell_from_edges",
+    "graph_from_edges",
+    "graph_to_host_edges",
+    "push_coo",
+    "push_ell",
+    "TOY_TABLE2",
+    "bipartite_graph",
+    "erdos_renyi_graph",
+    "paper_dataset",
+    "powerlaw_graph",
+    "toy_graph",
+]

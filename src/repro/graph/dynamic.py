@@ -1,0 +1,119 @@
+"""Dynamic graph maintenance — the index-free story of the paper.
+
+ProbeSim precomputes nothing, so supporting a dynamic graph only requires
+that the *graph representation itself* absorbs updates cheaply.  Both device
+representations do:
+
+* COO (``Graph``): insertion appends into the capacity-padded edge buffer
+  (O(1) per edge); deletion swap-removes with the last live edge.
+* ELL (``EllGraph``): insertion writes slot ``in_deg[dst]`` of row ``dst``;
+  deletion swap-removes within the row.
+
+All updates are functional (return new pytrees) and jit-compatible, so a
+serving loop can interleave `update -> query -> update` entirely on device.
+Contrast with the paper's index-based competitors (TSF: rebuild R_g one-way
+graphs; SLING: full rebuild).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.graph.structs import EllGraph, Graph
+
+Array = jax.Array
+
+
+@jax.jit
+def _occurrence_index(x: Array) -> Array:
+    """occ[i] = #{j < i : x[j] == x[i]} (O(B^2); update batches are small)."""
+    eq = x[None, :] == x[:, None]
+    tri = jnp.tril(jnp.ones_like(eq, dtype=jnp.int32), k=-1)
+    return (eq.astype(jnp.int32) * tri).sum(axis=1)
+
+
+def insert_edges(g: Graph, src: Array, dst: Array) -> Graph:
+    """Append a batch of edges (src[i] -> dst[i]) to the COO buffer."""
+    b = src.shape[0]
+    pos = g.num_edges + jnp.arange(b, dtype=jnp.int32)
+    ok = pos < g.capacity  # silently drop past capacity (callers size buffers)
+    pos_c = jnp.where(ok, pos, g.capacity - 1)
+    new_src = g.src.at[pos_c].set(jnp.where(ok, src, g.src[pos_c]))
+    new_dst = g.dst.at[pos_c].set(jnp.where(ok, dst, g.dst[pos_c]))
+    ones = ok.astype(jnp.int32)
+    in_deg = g.in_deg.at[dst.clip(0, g.n - 1)].add(ones)
+    out_deg = g.out_deg.at[src.clip(0, g.n - 1)].add(ones)
+    return g.replace(
+        src=new_src,
+        dst=new_dst,
+        in_deg=in_deg,
+        out_deg=out_deg,
+        num_edges=g.num_edges + ones.sum(),
+    )
+
+
+def insert_edges_ell(eg: EllGraph, src: Array, dst: Array) -> EllGraph:
+    """Mirror insertion into the ELL in-neighbor table."""
+    occ = _occurrence_index(dst)
+    slot = eg.in_deg[dst] + occ
+    ok = slot < eg.k_max
+    slot_c = jnp.where(ok, slot, eg.k_max - 1)
+    prev = eg.in_nbrs[dst, slot_c]
+    table = eg.in_nbrs.at[dst, slot_c].set(jnp.where(ok, src, prev))
+    in_deg = eg.in_deg.at[dst].add(ok.astype(jnp.int32))
+    return eg.replace(in_nbrs=table, in_deg=in_deg)
+
+
+def delete_edges(g: Graph, src: Array, dst: Array) -> Graph:
+    """Swap-remove a batch of edges (sequential scan; batches are small)."""
+
+    def body(carry, sd):
+        cur_src, cur_dst, in_deg, out_deg, ne = carry
+        s, d = sd
+        match = (cur_src == s) & (cur_dst == d)
+        found = match.any()
+        pos = jnp.argmax(match)
+        last = ne - 1
+        # move the last live edge into pos, stamp sentinel at last
+        moved_s = cur_src[last]
+        moved_d = cur_dst[last]
+        cur_src = cur_src.at[pos].set(jnp.where(found, moved_s, cur_src[pos]))
+        cur_dst = cur_dst.at[pos].set(jnp.where(found, moved_d, cur_dst[pos]))
+        cur_src = cur_src.at[last].set(jnp.where(found, g.n, cur_src[last]))
+        cur_dst = cur_dst.at[last].set(jnp.where(found, g.n, cur_dst[last]))
+        dec = found.astype(jnp.int32)
+        in_deg = in_deg.at[d.clip(0, g.n - 1)].add(-dec)
+        out_deg = out_deg.at[s.clip(0, g.n - 1)].add(-dec)
+        return (cur_src, cur_dst, in_deg, out_deg, ne - dec), found
+
+    init = (g.src, g.dst, g.in_deg, g.out_deg, g.num_edges)
+    (new_src, new_dst, in_deg, out_deg, ne), _ = jax.lax.scan(
+        body, init, (src, dst)
+    )
+    return g.replace(
+        src=new_src, dst=new_dst, in_deg=in_deg, out_deg=out_deg, num_edges=ne
+    )
+
+
+def delete_edges_ell(eg: EllGraph, src: Array, dst: Array) -> EllGraph:
+    """Swap-remove within ELL rows (sequential scan)."""
+
+    def body(carry, sd):
+        table, in_deg = carry
+        s, d = sd
+        row = table[d]
+        match = row == s
+        found = match.any()
+        k = jnp.argmax(match)
+        last = in_deg[d] - 1
+        moved = row[last.clip(0, eg.k_max - 1)]
+        row = row.at[k].set(jnp.where(found, moved, row[k]))
+        row = row.at[last.clip(0, eg.k_max - 1)].set(
+            jnp.where(found, eg.n, row[last.clip(0, eg.k_max - 1)])
+        )
+        table = table.at[d].set(row)
+        in_deg = in_deg.at[d].add(-found.astype(jnp.int32))
+        return (table, in_deg), found
+
+    (table, in_deg), _ = jax.lax.scan(body, (eg.in_nbrs, eg.in_deg), (src, dst))
+    return eg.replace(in_nbrs=table, in_deg=in_deg)

@@ -1,0 +1,225 @@
+"""Graph data structures for TPU-resident graph algorithms.
+
+Three complementary device representations, all capacity-padded so shapes are
+static under jit:
+
+* ``Graph`` — COO edge list (``src``, ``dst``) padded with the sentinel node
+  id ``n``; per-node in/out degrees.  This is the *push* representation: a
+  PROBE / GCN propagation level is ``segment_sum(scores[src] * w, dst)``.
+* ``EllGraph`` — padded in-neighbor table ``in_nbrs[n, k_max]`` (ELL format).
+  This is the *gather* representation: propagation becomes a dense gather +
+  masked reduce (no scatter), which is the TPU-preferred layout and the one
+  our Pallas SpMM kernel consumes.  Also used for O(1) uniform in-neighbor
+  sampling in sqrt(c)-walk generation.
+* ``CsrGraph`` — classic indptr/indices (host-built), used by the host-side
+  neighbor sampler and IO.
+
+All node ids are int32.  The sentinel id for padding is ``n`` (one past the
+last real node); arrays that may be indexed by sentinel carry one extra row.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils.pytree import static, struct
+
+Array = jax.Array
+
+
+@struct
+class Graph:
+    """COO graph, capacity padded.  Padding edges have src = dst = n."""
+
+    src: Array  # int32 [capacity]
+    dst: Array  # int32 [capacity]
+    in_deg: Array  # int32 [n]
+    out_deg: Array  # int32 [n]
+    num_edges: Array  # int32 scalar (actual edges)
+    n: int = static()
+    capacity: int = static()
+
+    @property
+    def inv_in_deg(self) -> Array:
+        """1/|I(v)| with 0 for dangling nodes (float32 [n])."""
+        d = self.in_deg.astype(jnp.float32)
+        return jnp.where(d > 0, 1.0 / jnp.maximum(d, 1.0), 0.0)
+
+    def edge_mask(self) -> Array:
+        """bool [capacity]: True for real (non-padding) edges."""
+        return self.src < self.n
+
+
+@struct
+class EllGraph:
+    """Padded in-neighbor table (ELL).  in_nbrs[v, k] = k-th in-neighbor of v
+    for k < in_deg[v], else sentinel n."""
+
+    in_nbrs: Array  # int32 [n, k_max], padded with n
+    in_deg: Array  # int32 [n]
+    n: int = static()
+    k_max: int = static()
+
+    @property
+    def inv_in_deg(self) -> Array:
+        d = self.in_deg.astype(jnp.float32)
+        return jnp.where(d > 0, 1.0 / jnp.maximum(d, 1.0), 0.0)
+
+
+class CsrGraph:
+    """Host-side CSR (numpy).  indptr[n+1], indices[m] sorted by row."""
+
+    def __init__(self, indptr: np.ndarray, indices: np.ndarray, n: int):
+        self.indptr = np.asarray(indptr, dtype=np.int64)
+        self.indices = np.asarray(indices, dtype=np.int32)
+        self.n = int(n)
+
+    @property
+    def m(self) -> int:
+        return int(self.indices.shape[0])
+
+    def degree(self) -> np.ndarray:
+        return np.diff(self.indptr).astype(np.int32)
+
+    def neighbors(self, v: int) -> np.ndarray:
+        return self.indices[self.indptr[v] : self.indptr[v + 1]]
+
+
+# ---------------------------------------------------------------------------
+# Constructors
+# ---------------------------------------------------------------------------
+
+
+def graph_from_edges(
+    src: np.ndarray,
+    dst: np.ndarray,
+    n: int,
+    capacity: int | None = None,
+) -> Graph:
+    """Build a device COO ``Graph`` from host edge arrays.
+
+    ``capacity`` reserves head-room for dynamic insertions (defaults to m).
+    """
+    src = np.asarray(src, dtype=np.int32)
+    dst = np.asarray(dst, dtype=np.int32)
+    m = src.shape[0]
+    if capacity is None:
+        capacity = m
+    if capacity < m:
+        raise ValueError(f"capacity {capacity} < num edges {m}")
+    pad = capacity - m
+    src_p = np.concatenate([src, np.full(pad, n, dtype=np.int32)])
+    dst_p = np.concatenate([dst, np.full(pad, n, dtype=np.int32)])
+    in_deg = np.bincount(dst, minlength=n).astype(np.int32)
+    out_deg = np.bincount(src, minlength=n).astype(np.int32)
+    return Graph(
+        src=jnp.asarray(src_p),
+        dst=jnp.asarray(dst_p),
+        in_deg=jnp.asarray(in_deg[:n]),
+        out_deg=jnp.asarray(out_deg[:n]),
+        num_edges=jnp.asarray(m, dtype=jnp.int32),
+        n=int(n),
+        capacity=int(capacity),
+    )
+
+
+def ell_from_edges(
+    src: np.ndarray,
+    dst: np.ndarray,
+    n: int,
+    k_max: int | None = None,
+) -> EllGraph:
+    """Pack in-neighbors into an ELL table.  k_max defaults to max in-degree."""
+    src = np.asarray(src, dtype=np.int32)
+    dst = np.asarray(dst, dtype=np.int32)
+    in_deg = np.bincount(dst, minlength=n).astype(np.int32)[:n]
+    deg_cap = int(in_deg.max()) if in_deg.size else 0
+    if k_max is None:
+        k_max = max(deg_cap, 1)
+    if deg_cap > k_max:
+        raise ValueError(f"max in-degree {deg_cap} exceeds k_max {k_max}")
+    table = np.full((n, k_max), n, dtype=np.int32)
+    # stable counting fill
+    order = np.argsort(dst, kind="stable")
+    slot = np.zeros(n, dtype=np.int64)
+    d_sorted = dst[order]
+    s_sorted = src[order]
+    # vectorized slot assignment: position within each dst group
+    group_start = np.searchsorted(d_sorted, np.arange(n))
+    idx_within = np.arange(len(d_sorted)) - group_start[d_sorted]
+    table[d_sorted, idx_within] = s_sorted
+    del slot
+    return EllGraph(
+        in_nbrs=jnp.asarray(table),
+        in_deg=jnp.asarray(in_deg),
+        n=int(n),
+        k_max=int(k_max),
+    )
+
+
+def csr_from_edges(src: np.ndarray, dst: np.ndarray, n: int, by: str = "dst") -> CsrGraph:
+    """Host CSR grouped by ``dst`` (in-CSR, default) or ``src`` (out-CSR)."""
+    src = np.asarray(src, dtype=np.int32)
+    dst = np.asarray(dst, dtype=np.int32)
+    key, val = (dst, src) if by == "dst" else (src, dst)
+    order = np.argsort(key, kind="stable")
+    counts = np.bincount(key, minlength=n)[:n]
+    indptr = np.zeros(n + 1, dtype=np.int64)
+    np.cumsum(counts, out=indptr[1:])
+    return CsrGraph(indptr, val[order], n)
+
+
+def graph_to_host_edges(g: Graph) -> tuple[np.ndarray, np.ndarray]:
+    """Extract the real (non-padding) edges to host numpy."""
+    m = int(g.num_edges)
+    return np.asarray(g.src[:m]), np.asarray(g.dst[:m])
+
+
+# ---------------------------------------------------------------------------
+# Propagation primitives (the substrate shared by PROBE and the GNN layers)
+# ---------------------------------------------------------------------------
+
+
+def push_coo(
+    g: Graph,
+    scores: Array,
+    weights: Array | None = None,
+) -> Array:
+    """One propagation level over the COO edges.
+
+    ``new[v] = sum_{x in I(v)} scores[x] * w[v]`` where ``w`` defaults to 1.
+    ``scores`` is [n, ...] or [n]; returns same shape.  Padding edges scatter
+    into the sentinel row which is dropped.
+    """
+    msgs = scores[g.src.clip(0, g.n - 1)]
+    msgs = jnp.where(
+        (g.src < g.n)[(...,) + (None,) * (msgs.ndim - 1)], msgs, 0.0
+    )
+    out = jax.ops.segment_sum(msgs, g.dst, num_segments=g.n + 1)[: g.n]
+    if weights is not None:
+        out = out * weights[(...,) + (None,) * (out.ndim - 1)].reshape(
+            (g.n,) + (1,) * (out.ndim - 1)
+        )
+    return out
+
+
+def push_ell(
+    eg: EllGraph,
+    scores: Array,
+    weights: Array | None = None,
+) -> Array:
+    """Gather-based propagation level over the ELL in-neighbor table.
+
+    ``new[v] = w[v] * sum_{k < in_deg[v]} scores[in_nbrs[v, k]]``.
+    ``scores``: [n] or [n, B].  TPU-friendly: pure gather + reduce, no scatter.
+    """
+    padded = jnp.concatenate(
+        [scores, jnp.zeros((1,) + scores.shape[1:], scores.dtype)], axis=0
+    )
+    gathered = padded[eg.in_nbrs]  # [n, k_max, ...]
+    out = gathered.sum(axis=1)
+    if weights is not None:
+        out = out * weights.reshape((eg.n,) + (1,) * (out.ndim - 1))
+    return out

@@ -1,0 +1,119 @@
+"""Pallas TPU kernel: FlashAttention (causal, GQA) with online softmax.
+
+Tiling: grid = (B*H, S_q/BQ, T_kv/BK); the innermost grid dim streams KV
+blocks while running-max / running-sum / output accumulators live in VMEM
+scratch (classic FlashAttention-2 schedule — one output tile is revisited
+across the KV grid dim and finalized on the last block).
+
+GQA is handled in the BlockSpec index maps: query head h reads kv head
+h // (H / Hkv) — no repeated KV materialization.
+
+VMEM budget per instance: q tile BQ x dh + kv tiles BK x dh x 2 + acc
+BQ x dh + 2 vectors — with BQ=BK=128, dh=128 fp32 that is ~260 KB, well
+under the ~16 MB VMEM target."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Array = jax.Array
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            bq: int, bk: int, scale: float, causal: bool, kv_blocks: int):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32) * scale  # [bq, dh]
+    k = k_ref[0].astype(jnp.float32)  # [bk, dh]
+    v = v_ref[0].astype(jnp.float32)  # [bk, dh]
+    s = q @ k.T  # [bq, bk]
+    if causal:
+        rows = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        cols = kj * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        s = jnp.where(rows >= cols, s, NEG_INF)
+    m_prev = m_scr[...]  # [bq, 1]
+    l_prev = l_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_prev * corr + p.sum(axis=-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * corr + p @ v
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(kj == kv_blocks - 1)
+    def _final():
+        o_ref[0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)).astype(
+            o_ref.dtype
+        )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "scale", "block_q", "block_k", "interpret"),
+)
+def flash_attention_pallas(
+    q: Array,  # [B, H, S, dh]
+    k: Array,  # [B, Hkv, T, dh]
+    v: Array,  # [B, Hkv, T, dh]
+    *,
+    causal: bool = True,
+    scale: float | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,
+) -> Array:
+    B, H, S, dh = q.shape
+    Hkv, T = k.shape[1], k.shape[2]
+    group = H // Hkv
+    scale = scale if scale is not None else dh**-0.5
+    bq = min(block_q, S)
+    bk = min(block_k, T)
+    assert S % bq == 0 and T % bk == 0
+    kv_blocks = T // bk
+    grid = (B * H, S // bq, kv_blocks)
+
+    kernel = functools.partial(
+        _kernel, bq=bq, bk=bk, scale=scale, causal=causal, kv_blocks=kv_blocks
+    )
+    qs = q.reshape(B * H, S, dh)
+    ks = k.reshape(B * Hkv, T, dh)
+    vs = v.reshape(B * Hkv, T, dh)
+
+    def kv_index(bh, i, j):
+        b = bh // H
+        h = bh % H
+        return (b * Hkv + h // group, j, 0)
+
+    from jax.experimental.pallas import tpu as pltpu
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, dh), lambda bh, i, j: (bh, i, 0)),
+            pl.BlockSpec((1, bk, dh), kv_index),
+            pl.BlockSpec((1, bk, dh), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, bq, dh), lambda bh, i, j: (bh, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, S, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),  # running max
+            pltpu.VMEM((bq, 1), jnp.float32),  # running denominator
+            pltpu.VMEM((bq, dh), jnp.float32),  # output accumulator
+        ],
+        interpret=interpret,
+    )(qs, ks, vs)
+    return out.reshape(B, H, S, dh)

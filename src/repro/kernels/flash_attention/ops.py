@@ -1,0 +1,38 @@
+"""Public op: flash attention in [B, S, H, dh] layout (model convention)."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.flash_attention.flash_attention import flash_attention_pallas
+from repro.kernels.flash_attention.ref import attention_ref
+
+Array = jax.Array
+
+
+def flash_attention(
+    q: Array,  # [B, S, H, dh]
+    k: Array,  # [B, T, Hkv, dh]
+    v: Array,  # [B, T, Hkv, dh]
+    *,
+    causal: bool = True,
+    scale: float | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+) -> Array:
+    B, S, H, dh = q.shape
+    T = k.shape[1]
+    bq = min(block_q, S)
+    bk = min(block_k, T)
+    if S % bq != 0 or T % bk != 0 or dh % 8 != 0:
+        return attention_ref(q, k, v, causal=causal, scale=scale)
+    out = flash_attention_pallas(
+        q.transpose(0, 2, 1, 3),
+        k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3),
+        causal=causal,
+        scale=scale,
+        block_q=bq,
+        block_k=bk,
+        interpret=jax.default_backend() != "tpu",
+    )
+    return out.transpose(0, 2, 1, 3)

@@ -1,0 +1,29 @@
+"""Oracle: plain softmax attention (GQA-aware), fp32 accumulation."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def attention_ref(
+    q: Array,  # [B, S, H, dh]
+    k: Array,  # [B, T, Hkv, dh]
+    v: Array,  # [B, T, Hkv, dh]
+    *,
+    causal: bool = True,
+    scale: float | None = None,
+) -> Array:
+    B, S, H, dh = q.shape
+    Hkv = k.shape[2]
+    g = H // Hkv
+    scale = scale if scale is not None else dh**-0.5
+    qg = q.reshape(B, S, Hkv, g, dh).astype(jnp.float32)
+    logits = jnp.einsum("bsngd,btnd->bngst", qg, k.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.arange(S)[:, None] >= jnp.arange(k.shape[1])[None, :]
+        logits = jnp.where(mask[None, None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bngst,btnd->bsngd", p, v.astype(jnp.float32))
+    return o.reshape(B, S, H, dh).astype(q.dtype)

@@ -1,0 +1,32 @@
+"""Public op: fused PROBE push level."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.probe_push.probe_push import probe_push_pallas
+from repro.kernels.probe_push.ref import probe_push_ref
+
+Array = jax.Array
+
+
+def probe_push(
+    nbrs: Array,
+    scores: Array,  # [n, B]
+    weights: Array,
+    exclude: Array,
+    *,
+    prune_thresh: float = 0.0,
+    block_rows: int = 128,
+) -> Array:
+    n = weights.shape[0]
+    if n % block_rows != 0 or scores.shape[1] % 8 != 0:
+        return probe_push_ref(nbrs, scores, weights, exclude, prune_thresh)
+    padded = jnp.concatenate(
+        [scores, jnp.zeros((1, scores.shape[1]), scores.dtype)], axis=0
+    )
+    return probe_push_pallas(
+        nbrs, padded, weights, exclude,
+        prune_thresh=prune_thresh, block_rows=block_rows,
+        interpret=jax.default_backend() != "tpu",
+    )

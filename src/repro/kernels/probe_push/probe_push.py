@@ -1,0 +1,83 @@
+"""Pallas TPU kernel: fused PROBE push level.
+
+Fuses three HBM round-trips of the unfused path into one pass:
+prune-threshold (rule 2) on the *gathered* source rows, the weighted ELL
+gather-sum, and the per-column exclusion mask (first-meeting constraint)
+applied in-register before the store.
+
+Same tiling as spmm_ell; the exclusion ids ride along as one extra
+scalar-prefetch vector [B] compared against the absolute row id of each
+output row."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Array = jax.Array
+
+
+def _kernel(nbrs_ref, w_ref, excl_ref, scores_ref, out_ref, *, bn: int,
+            k_slots: int, n_rows: int, thresh: float):
+    pid = pl.program_id(0)
+    B = out_ref.shape[1]
+
+    def row_body(i, acc):
+        def k_body(k, row_acc):
+            idx = nbrs_ref[i, k]
+            idx = jnp.where(idx > n_rows, n_rows, idx)
+            row = scores_ref[pl.dslice(idx, 1), :][0]
+            row = row.astype(jnp.float32)
+            if thresh > 0.0:
+                row = jnp.where(row > thresh, row, 0.0)  # fused prune
+            return row_acc + row
+
+        row_acc = jax.lax.fori_loop(
+            0, k_slots, k_body, jnp.zeros((B,), jnp.float32)
+        )
+        row_acc = row_acc * w_ref[i]
+        # fused exclusion mask: zero the columns whose excluded row is THIS row
+        abs_row = pid * bn + i
+        excl = excl_ref[...]  # [B]
+        row_acc = jnp.where(excl == abs_row, 0.0, row_acc)
+        return acc.at[i, :].set(row_acc)
+
+    acc = jax.lax.fori_loop(0, bn, row_body, jnp.zeros(out_ref.shape, jnp.float32))
+    out_ref[...] = acc.astype(out_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_rows", "interpret", "prune_thresh")
+)
+def probe_push_pallas(
+    nbrs: Array,  # int32 [n, K]
+    scores: Array,  # [n + 1, B] (sentinel zero row at n)
+    weights: Array,  # f32 [n]
+    exclude: Array,  # int32 [B]
+    *,
+    prune_thresh: float = 0.0,
+    block_rows: int = 128,
+    interpret: bool = True,
+) -> Array:
+    n, K = nbrs.shape
+    B = scores.shape[1]
+    assert scores.shape[0] == n + 1
+    assert n % block_rows == 0
+    kernel = functools.partial(
+        _kernel, bn=block_rows, k_slots=K, n_rows=n, thresh=prune_thresh
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(n // block_rows,),
+        in_specs=[
+            pl.BlockSpec((block_rows, K), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows,), lambda i: (i,)),
+            pl.BlockSpec((B,), lambda i: (0,)),  # exclusion ids (replicated)
+            pl.BlockSpec((n + 1, B), lambda i: (0, 0)),  # scores (gathered)
+        ],
+        out_specs=pl.BlockSpec((block_rows, B), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, B), scores.dtype),
+        interpret=interpret,
+    )(nbrs, weights, exclude, scores)

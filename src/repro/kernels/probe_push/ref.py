@@ -1,0 +1,33 @@
+"""Oracle for the fused PROBE push level (push + weights + exclusion + prune)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def probe_push_ref(
+    nbrs: Array,  # int32 [n, K], sentinel = n
+    scores: Array,  # [n, B]
+    weights: Array,  # f32 [n] (= sqrt_c / in_deg)
+    exclude: Array,  # int32 [B] per-column excluded row (sentinel -> none)
+    prune_thresh: float = 0.0,  # pruning-rule-2 threshold for THIS level
+) -> Array:
+    """One fused PROBE level:
+
+    1. prune:  s = where(s > thresh, s, 0)
+    2. push:   t[v] = w[v] * sum_k s[nbrs[v, k]]
+    3. mask:   t[exclude[b], b] = 0
+    """
+    n, B = scores.shape
+    if prune_thresh > 0.0:
+        scores = jnp.where(scores > prune_thresh, scores, 0.0)
+    padded = jnp.concatenate([scores, jnp.zeros((1, B), scores.dtype)], axis=0)
+    out = padded[nbrs.clip(0, n)].sum(axis=1) * weights[:, None]
+    cols = jnp.arange(B)
+    ok = exclude < n
+    out = out.at[exclude.clip(0, n - 1), cols].set(
+        jnp.where(ok, 0.0, out[exclude.clip(0, n - 1), cols])
+    )
+    return out

@@ -1,0 +1,37 @@
+"""Public op: ELL SpMM with kernel/oracle dispatch."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.spmm_ell.ref import spmm_ell_ref
+from repro.kernels.spmm_ell.spmm_ell import spmm_ell_pallas
+
+Array = jax.Array
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def spmm_ell(nbrs: Array, scores: Array, weights: Array,
+             *, block_rows: int = 128) -> Array:
+    """out[v] = w[v] * sum_k scores[nbrs[v,k]]; scores [n, B] (no dump row).
+
+    Dispatches to the Pallas kernel when the shapes tile (TPU target;
+    interpret-mode on CPU), falling back to the jnp oracle otherwise.
+    """
+    n = weights.shape[0]
+    squeeze = scores.ndim == 1
+    if squeeze:
+        scores = scores[:, None]
+    if n % block_rows != 0 or scores.shape[1] % 8 != 0:
+        out = spmm_ell_ref(nbrs, scores, weights)
+        return out[:, 0] if squeeze else out
+    padded = jnp.concatenate(
+        [scores, jnp.zeros((1,) + scores.shape[1:], scores.dtype)], axis=0
+    )
+    out = spmm_ell_pallas(
+        nbrs, padded, weights, block_rows=block_rows, interpret=not _on_tpu()
+    )
+    return out[:, 0] if squeeze else out

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the ELL SpMM (the PROBE push / GCN aggregation)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def spmm_ell_ref(nbrs: Array, scores: Array, weights: Array) -> Array:
+    """out[v] = weights[v] * sum_k scores[nbrs[v, k]].
+
+    nbrs: int32 [n, K] with sentinel == n (maps to an implicit zero row).
+    scores: [n, B] (or [n]); weights: [n].
+    """
+    n = weights.shape[0]
+    squeeze = scores.ndim == 1
+    if squeeze:
+        scores = scores[:, None]
+    padded = jnp.concatenate(
+        [scores, jnp.zeros((1,) + scores.shape[1:], scores.dtype)], axis=0
+    )
+    gathered = padded[nbrs.clip(0, n)]  # [n, K, B]
+    out = gathered.sum(axis=1) * weights[:, None]
+    return out[:, 0] if squeeze else out

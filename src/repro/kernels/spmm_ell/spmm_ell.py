@@ -1,0 +1,78 @@
+"""Pallas TPU kernel: row-blocked ELL SpMM (gather + reduce, no scatter).
+
+The PROBE push / GCN hot loop: ``out[v] = w[v] * sum_k S[nbrs[v, k]]``.
+
+TPU mapping (DESIGN.md §2 hardware adaptation):
+* rows tile in blocks of BN (sublane-aligned); the walk-column dim B rides
+  the 128-wide lane dimension, so each gathered row is one VREG-aligned
+  vector load;
+* the neighbor-id block is a *scalar-prefetch* operand (SMEM) — ids must be
+  available before the gather addresses can be issued;
+* the score matrix stays in ANY/HBM space and is gathered row-by-row with
+  ``pl.load`` dynamic slices — SpMM is gather-bound by nature, and the VMEM
+  budget is BN x B accumulator + one gathered row;
+* K (neighbor slots) is an unrolled static loop.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Array = jax.Array
+
+
+def _kernel(nbrs_ref, w_ref, scores_ref, out_ref, *, bn: int, k_slots: int,
+            n_rows: int):
+    pid = pl.program_id(0)
+    acc = jnp.zeros(out_ref.shape, jnp.float32)
+
+    def row_body(i, acc):
+        def k_body(k, row_acc):
+            idx = nbrs_ref[i, k]
+            idx = jnp.where(idx > n_rows, n_rows, idx)  # clamp to zero row
+            row = scores_ref[pl.dslice(idx, 1), :]
+            return row_acc + row[0].astype(jnp.float32)
+
+        row_acc = jax.lax.fori_loop(
+            0, k_slots, k_body, jnp.zeros((out_ref.shape[1],), jnp.float32)
+        )
+        return acc.at[i, :].set(row_acc * w_ref[i])
+
+    acc = jax.lax.fori_loop(0, bn, row_body, acc)
+    out_ref[...] = acc.astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def spmm_ell_pallas(
+    nbrs: Array,  # int32 [n, K], sentinel = n (or larger -> clamped)
+    scores: Array,  # [n + 1, B]; row n must be zeros (sentinel dump row)
+    weights: Array,  # f32 [n]
+    *,
+    block_rows: int = 128,
+    interpret: bool = True,
+) -> Array:
+    n, K = nbrs.shape
+    B = scores.shape[1]
+    assert scores.shape[0] == n + 1, "scores needs the sentinel zero row"
+    assert n % block_rows == 0, f"n={n} must tile by block_rows={block_rows}"
+    grid = (n // block_rows,)
+    kernel = functools.partial(
+        _kernel, bn=block_rows, k_slots=K, n_rows=n
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, K), lambda i: (i, 0)),  # nbrs tile
+            pl.BlockSpec((block_rows,), lambda i: (i,)),  # weights tile
+            pl.BlockSpec(
+                (n + 1, B), lambda i: (0, 0)
+            ),  # full scores (ANY space; gathered)
+        ],
+        out_specs=pl.BlockSpec((block_rows, B), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, B), scores.dtype),
+        interpret=interpret,
+    )(nbrs, weights, scores)

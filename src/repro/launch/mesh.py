@@ -1,0 +1,34 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state — required because the dry-run must set XLA_FLAGS
+before any jax initialization."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_local_mesh(shape=(2, 4), axes=("data", "model")):
+    """Small mesh over whatever devices exist (tests / local runs)."""
+    n = 1
+    for s in shape:
+        n *= s
+    assert len(jax.devices()) >= n, f"need {n} devices"
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+HW = dict(  # TPU v5e constants (per assignment)
+    peak_flops_bf16=197e12,  # FLOP/s per chip
+    hbm_bw=819e9,  # B/s per chip
+    ici_bw=50e9,  # B/s per link
+)

@@ -1,0 +1,176 @@
+"""Message-passing GNN layers on the segment_sum substrate.
+
+All layers consume COO edges (src, dst int32 [E], mask bool [E]) over a
+padded node table [N(+1), d] — the same gather/scatter machinery as the
+ProbeSim PROBE push (DESIGN.md §2).  JAX has no CSR SpMM; per the assignment
+this scatter-based message passing IS the system.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+import repro.models.common as cm
+
+Array = jax.Array
+
+
+def scatter_sum(values: Array, dst: Array, num_nodes: int) -> Array:
+    """segment-sum messages [E, d] into nodes [N, d] (sentinel dst dropped)."""
+    return jax.ops.segment_sum(values, dst, num_segments=num_nodes + 1)[:num_nodes]
+
+
+def degree(dst: Array, mask: Array, num_nodes: int) -> Array:
+    return jax.ops.segment_sum(
+        mask.astype(jnp.float32), dst, num_segments=num_nodes + 1
+    )[:num_nodes]
+
+
+# ---------------------------------------------------------------------------
+# GCN (Kipf & Welling) — symmetric-normalized SpMM
+# ---------------------------------------------------------------------------
+
+
+def init_gcn_layer(key: Array, d_in: int, d_out: int, dtype) -> dict:
+    return dict(
+        w=cm.dense_init(key, d_in, d_out, dtype),
+        b=jnp.zeros((d_out,), dtype),
+    )
+
+
+def gcn_layer(
+    p: dict, h: Array, src: Array, dst: Array, mask: Array, *, act=jax.nn.relu
+) -> Array:
+    n = h.shape[0]
+    deg = degree(dst, mask, n) + degree(src, mask, n) * 0.0 + 1.0  # +self loop
+    inv_sqrt = jax.lax.rsqrt(deg)
+    hw = jnp.einsum("nd,df->nf", h, p["w"])
+    msg = hw[src.clip(0, n - 1)] * (inv_sqrt[src.clip(0, n - 1)])[:, None]
+    msg = jnp.where(mask[:, None], msg, 0.0)
+    agg = scatter_sum(msg, dst, n) * inv_sqrt[:, None]
+    out = agg + hw * (inv_sqrt * inv_sqrt)[:, None] + p["b"]  # self loop
+    return act(out) if act is not None else out
+
+
+# ---------------------------------------------------------------------------
+# GIN (Xu et al.) — sum aggregation + MLP, learnable eps
+# ---------------------------------------------------------------------------
+
+
+def init_gin_layer(key: Array, d_in: int, d_out: int, dtype) -> dict:
+    k1, k2 = jax.random.split(key)
+    return dict(
+        w1=cm.dense_init(k1, d_in, d_out, dtype),
+        b1=jnp.zeros((d_out,), dtype),
+        w2=cm.dense_init(k2, d_out, d_out, dtype),
+        b2=jnp.zeros((d_out,), dtype),
+        eps=jnp.zeros((), jnp.float32),
+    )
+
+
+def gin_layer(p: dict, h: Array, src: Array, dst: Array, mask: Array) -> Array:
+    n = h.shape[0]
+    msg = jnp.where(mask[:, None], h[src.clip(0, n - 1)], 0.0)
+    agg = scatter_sum(msg, dst, n)
+    z = (1.0 + p["eps"]) * h + agg
+    z = jax.nn.relu(jnp.einsum("nd,df->nf", z, p["w1"]) + p["b1"])
+    return jnp.einsum("nd,df->nf", z, p["w2"]) + p["b2"]
+
+
+# ---------------------------------------------------------------------------
+# GatedGCN (Bresson & Laurent; benchmarking-GNNs config) — edge gates
+# ---------------------------------------------------------------------------
+
+
+def init_gatedgcn_layer(key: Array, d: int, dtype) -> dict:
+    ks = jax.random.split(key, 5)
+    return {
+        "A": cm.dense_init(ks[0], d, d, dtype),
+        "B": cm.dense_init(ks[1], d, d, dtype),
+        "C": cm.dense_init(ks[2], d, d, dtype),
+        "U": cm.dense_init(ks[3], d, d, dtype),
+        "V": cm.dense_init(ks[4], d, d, dtype),
+        "ln_h": jnp.ones((d,), dtype),
+        "ln_e": jnp.ones((d,), dtype),
+    }
+
+
+def gatedgcn_layer(
+    p: dict,
+    h: Array,  # [N, d]
+    e: Array,  # [E, d] edge features
+    src: Array,
+    dst: Array,
+    mask: Array,
+) -> tuple[Array, Array]:
+    n = h.shape[0]
+    s = src.clip(0, n - 1)
+    d_ = dst.clip(0, n - 1)
+    # edge update: e' = e + ReLU(LN(A h_i + B h_j + C e))
+    e_raw = (
+        jnp.einsum("nd,df->nf", h, p["A"])[d_]
+        + jnp.einsum("nd,df->nf", h, p["B"])[s]
+        + jnp.einsum("ed,df->ef", e, p["C"])
+    )
+    e_new = e + jax.nn.relu(cm.rms_norm(e_raw, p["ln_e"]))
+    gate = jax.nn.sigmoid(e_new)
+    gate = jnp.where(mask[:, None], gate, 0.0)
+    # normalized gated aggregation
+    vh = jnp.einsum("nd,df->nf", h, p["V"])
+    num = scatter_sum(gate * vh[s], dst, n)
+    den = scatter_sum(gate, dst, n) + 1e-6
+    h_raw = jnp.einsum("nd,df->nf", h, p["U"]) + num / den
+    h_new = h + jax.nn.relu(cm.rms_norm(h_raw, p["ln_h"]))
+    return h_new, e_new
+
+
+# ---------------------------------------------------------------------------
+# GAT (Velickovic et al., arXiv:1710.10903) — bonus arch: the SDDMM +
+# segment-softmax regime (kernel_taxonomy §GNN)
+# ---------------------------------------------------------------------------
+
+
+def segment_softmax(scores: Array, segments: Array, num_segments: int,
+                    mask: Array) -> Array:
+    """Softmax of edge scores within each destination segment."""
+    scores = jnp.where(mask, scores, -1e30)
+    seg_max = jax.ops.segment_max(scores, segments, num_segments=num_segments)
+    seg_max = jnp.where(jnp.isfinite(seg_max), seg_max, 0.0)
+    ex = jnp.exp(scores - seg_max[segments.clip(0, num_segments - 1)])
+    ex = jnp.where(mask, ex, 0.0)
+    denom = jax.ops.segment_sum(ex, segments, num_segments=num_segments)
+    return ex / jnp.maximum(denom[segments.clip(0, num_segments - 1)], 1e-16)
+
+
+def init_gat_layer(key: Array, d_in: int, d_out: int, heads: int, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return dict(
+        w=cm.dense_init(k1, d_in, heads * d_out, dtype).reshape(d_in, heads, d_out),
+        a_src=(jax.random.normal(k2, (heads, d_out)) * 0.1).astype(dtype),
+        a_dst=(jax.random.normal(k3, (heads, d_out)) * 0.1).astype(dtype),
+    )
+
+
+def gat_layer(
+    p: dict, h: Array, src: Array, dst: Array, mask: Array,
+    *, negative_slope: float = 0.2, concat: bool = True,
+) -> Array:
+    n = h.shape[0]
+    s = src.clip(0, n - 1)
+    d_ = dst.clip(0, n - 1)
+    hw = jnp.einsum("nd,dhf->nhf", h, p["w"])  # [N, H, F]
+    # SDDMM: per-edge attention logits from source and destination halves
+    e_src = jnp.einsum("nhf,hf->nh", hw, p["a_src"])[s]  # [E, H]
+    e_dst = jnp.einsum("nhf,hf->nh", hw, p["a_dst"])[d_]
+    logits = jax.nn.leaky_relu(e_src + e_dst, negative_slope)
+    # per-head segment softmax over incoming edges of each destination
+    segs = dst  # sentinel dst scatters into the dropped tail
+    alpha = jax.vmap(
+        lambda col: segment_softmax(col, segs, n + 1, mask), in_axes=1,
+        out_axes=1,
+    )(logits)  # [E, H]
+    msgs = hw[s] * alpha[..., None]  # [E, H, F]
+    out = jax.ops.segment_sum(
+        msgs.reshape(msgs.shape[0], -1), dst, num_segments=n + 1
+    )[:n].reshape(n, *hw.shape[1:])
+    return out.reshape(n, -1) if concat else out.mean(axis=1)

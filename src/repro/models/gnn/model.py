@@ -1,0 +1,113 @@
+"""GNN model drivers: init/forward/loss for the four assigned architectures.
+
+Input convention (all shapes padded/static):
+    feats   [N, d_feat] float  (N includes a padding tail; sentinel rows 0)
+    pos     [N, 3]             (nequip only)
+    src/dst [E] int32, mask [E] bool
+    labels  [N] int32 (node classification) or [G] float (graph regression)
+    graph_ids [N] int32 (batched_graphs readout)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+import repro.models.common as cm
+from repro.models.common import constrain
+from repro.models.gnn import layers as L
+from repro.models.gnn.nequip import init_nequip, nequip_forward
+
+Array = jax.Array
+
+
+def init_gnn(key: Array, cfg, d_feat: int) -> dict:
+    dtype = jnp.dtype(cfg.param_dtype)
+    if cfg.conv == "nequip":
+        return init_nequip(key, cfg, d_feat, dtype)
+    ks = jax.random.split(key, cfg.n_layers + 2)
+    p: dict = {"layers": []}
+    d_in = d_feat
+    for i in range(cfg.n_layers):
+        if cfg.conv == "gcn":
+            p["layers"].append(L.init_gcn_layer(ks[i], d_in, cfg.d_hidden, dtype))
+        elif cfg.conv == "gat":
+            heads = 4
+            p["layers"].append(
+                L.init_gat_layer(ks[i], d_in, cfg.d_hidden // heads, heads, dtype)
+            )
+        elif cfg.conv == "gin":
+            p["layers"].append(L.init_gin_layer(ks[i], d_in, cfg.d_hidden, dtype))
+        elif cfg.conv == "gatedgcn":
+            if d_in != cfg.d_hidden:
+                p["in_proj"] = cm.dense_init(ks[-2], d_in, cfg.d_hidden, dtype)
+            p["layers"].append(L.init_gatedgcn_layer(ks[i], cfg.d_hidden, dtype))
+        else:
+            raise ValueError(cfg.conv)
+        d_in = cfg.d_hidden
+    p["head"] = cm.dense_init(ks[-1], cfg.d_hidden, cfg.n_classes, dtype)
+    return p
+
+
+def gnn_forward(
+    params: dict,
+    batch: dict,
+    cfg,
+    *,
+    n_graphs: int = 1,
+) -> Array:
+    """Returns node logits [N, n_classes] (or graph outputs for nequip)."""
+    feats = batch["feats"]
+    src, dst, mask = batch["src"], batch["dst"], batch["mask"]
+    if cfg.conv == "nequip":
+        return nequip_forward(
+            params,
+            feats,
+            batch["pos"],
+            src,
+            dst,
+            mask,
+            cfg,
+            graph_ids=batch.get("graph_ids"),
+            n_graphs=n_graphs,
+        )
+    h = feats
+    h = constrain(h, "dp", None)
+    if "in_proj" in params:
+        h = jnp.einsum("nd,df->nf", h, params["in_proj"])
+    if cfg.conv == "gatedgcn":
+        e = jnp.zeros((src.shape[0], cfg.d_hidden), h.dtype) + 0.1
+        for lp in params["layers"]:
+            h, e = L.gatedgcn_layer(lp, h, e, src, dst, mask)
+    else:
+        for i, lp in enumerate(params["layers"]):
+            if cfg.conv == "gcn":
+                act = jax.nn.relu if i < cfg.n_layers - 1 else None
+                h = L.gcn_layer(lp, h, src, dst, mask, act=act)
+            elif cfg.conv == "gat":
+                h = L.gat_layer(lp, h, src, dst, mask)
+                if i < cfg.n_layers - 1:
+                    h = jax.nn.elu(h)
+            else:
+                h = L.gin_layer(lp, h, src, dst, mask)
+        h = constrain(h, "dp", None)
+    logits = jnp.einsum("nd,dc->nc", h, params["head"])
+    if "graph_ids" in batch and batch["graph_ids"] is not None:
+        logits = jax.ops.segment_sum(
+            logits, batch["graph_ids"], num_segments=n_graphs
+        )
+    return logits
+
+
+def gnn_loss(params: dict, batch: dict, cfg, *, n_graphs: int = 1):
+    out = gnn_forward(params, batch, cfg, n_graphs=n_graphs)
+    if cfg.conv == "nequip":
+        # energy regression per graph
+        tgt = batch["energy"]
+        loss = jnp.mean((out - tgt) ** 2)
+        return loss, dict(mse=loss)
+    labels = batch["labels"]
+    lmask = batch.get("label_mask", jnp.ones_like(labels, jnp.float32))
+    logz = jax.nn.logsumexp(out, axis=-1)
+    gold = jnp.take_along_axis(out, labels[:, None].clip(0), axis=-1)[:, 0]
+    nll = ((logz - gold) * lmask).sum() / jnp.maximum(lmask.sum(), 1.0)
+    return nll, dict(nll=nll)

@@ -1,0 +1,298 @@
+"""Attention: GQA (llama/yi/qwen) and MLA (DeepSeek-V2), train + decode.
+
+Decode paths are cache-resident:
+* GQA caches k/v per kv-head: [B, S_max, Hkv, dh].
+* MLA caches the *compressed latent* c_kv [B, S_max, r] plus the shared
+  rope key [B, S_max, d_rope] — the whole point of MLA — and runs decode in
+  the absorbed form (q projected into latent space; values expanded only
+  after the attention-weighted latent sum).
+
+The Pallas flash-attention kernel is switchable via ``use_kernel`` (training
+/prefill shapes); the pure-jnp path is the oracle and the dry-run path
+(Pallas custom-calls do not lower to the CPU dry-run backend).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import apply_rope, constrain
+
+Array = jax.Array
+
+NEG_INF = -1e30
+
+
+def _causal_mask(s_q: int, s_k: int, offset: int = 0) -> Array:
+    """[s_q, s_k] True where query i may attend key j (j <= i + offset)."""
+    qi = jnp.arange(s_q)[:, None] + offset
+    kj = jnp.arange(s_k)[None, :]
+    return kj <= qi
+
+
+def sdpa(
+    q: Array,  # [B, S, H, dh]
+    k: Array,  # [B, T, Hkv, dh]
+    v: Array,  # [B, T, Hkv, dhv]
+    *,
+    causal_offset: int | None = 0,
+    kv_len: Array | None = None,
+    scale: float | None = None,
+    use_kernel: bool = False,
+    chunk_q: int = 1024,
+    unroll_chunks: bool = False,
+    probs_dtype=jnp.float32,
+) -> Array:
+    """Grouped-query scaled-dot-product attention (pure jnp or Pallas).
+
+    Long sequences (S > chunk_q) scan over query chunks so the peak logits
+    buffer is [*, chunk_q, T] instead of [*, S, T] — the pure-jnp analogue of
+    the flash kernel's tiling (32k prefill would otherwise need an S x T
+    buffer: 32768^2 x heads x 4B per device)."""
+    B, S, H, dh = q.shape
+    T, Hkv = k.shape[1], k.shape[2]
+    group = H // Hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(dh)
+    if use_kernel and causal_offset is not None and S > 1:
+        from repro.kernels.flash_attention import ops as fa_ops
+
+        return fa_ops.flash_attention(q, k, v, causal=True, scale=scale)
+
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+
+    def block(q_blk: Array, row0) -> Array:
+        # q_blk: [B, bq, H, dh]; rows are global positions row0..row0+bq
+        bq = q_blk.shape[1]
+        qg = q_blk.reshape(B, bq, Hkv, group, dh).astype(jnp.float32)
+        logits = jnp.einsum("bsngd,btnd->bngst", qg, kf) * scale
+        if causal_offset is not None:
+            rows = row0 + jnp.arange(bq)[:, None] + causal_offset
+            cols = jnp.arange(T)[None, :]
+            logits = jnp.where((cols <= rows)[None, None, None], logits,
+                               NEG_INF)
+        if kv_len is not None:
+            valid = jnp.arange(T)[None, :] < kv_len[:, None]  # [B, T]
+            logits = jnp.where(valid[:, None, None, None], logits, NEG_INF)
+        probs = jax.nn.softmax(logits, axis=-1).astype(probs_dtype)
+        out = jnp.einsum("bngst,btnd->bsngd", probs,
+                         vf.astype(probs_dtype)).astype(jnp.float32)
+        return out.reshape(B, bq, H, v.shape[-1]).astype(q.dtype)
+
+    if S <= chunk_q or S % chunk_q != 0:
+        return block(q, 0)
+
+    n_blocks = S // chunk_q
+    qb = q.reshape(B, n_blocks, chunk_q, H, dh).transpose(1, 0, 2, 3, 4)
+
+    if unroll_chunks:  # dry-run variants: every chunk visible to cost_analysis
+        outs = jnp.stack([block(qb[i], i * chunk_q) for i in range(n_blocks)])
+    else:
+        def scan_fn(_, inp):
+            i, q_blk = inp
+            return None, block(q_blk, i * chunk_q)
+
+        _, outs = jax.lax.scan(scan_fn, None, (jnp.arange(n_blocks), qb))
+    return outs.transpose(1, 0, 2, 3, 4).reshape(B, S, H, v.shape[-1])
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+
+
+def init_gqa(key: Array, cfg, dtype) -> dict:
+    import repro.models.common as cm
+
+    d, H, Hkv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    ks = jax.random.split(key, 4)
+    return dict(
+        wq=cm.dense_init(ks[0], d, H * dh, dtype).reshape(d, H, dh),
+        wk=cm.dense_init(ks[1], d, Hkv * dh, dtype).reshape(d, Hkv, dh),
+        wv=cm.dense_init(ks[2], d, Hkv * dh, dtype).reshape(d, Hkv, dh),
+        wo=cm.dense_init(ks[3], H * dh, d, dtype).reshape(H, dh, d),
+    )
+
+
+def gqa_forward(
+    p: dict,
+    x: Array,  # [B, S, D]
+    positions: Array,  # [B, S]
+    cfg,
+    *,
+    use_kernel: bool = False,
+) -> Array:
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    q = constrain(q, "dp", None, "tp", None)
+    k = constrain(k, "dp", None, "tp", None)
+    o = sdpa(q, k, v, causal_offset=0, use_kernel=use_kernel,
+             unroll_chunks=not getattr(cfg, "scan_layers", True),
+             probs_dtype=jnp.bfloat16
+             if cfg.attn_probs_dtype == "bfloat16" else jnp.float32)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+
+
+def gqa_init_cache(cfg, batch: int, s_max: int, dtype) -> dict:
+    Hkv, dh = cfg.n_kv_heads, cfg.d_head
+    return dict(
+        k=jnp.zeros((batch, s_max, Hkv, dh), dtype),
+        v=jnp.zeros((batch, s_max, Hkv, dh), dtype),
+    )
+
+
+def gqa_decode(
+    p: dict,
+    cache: dict,
+    x: Array,  # [B, 1, D]
+    position: Array,  # [B] current position (== cache fill length)
+    cfg,
+) -> tuple[dict, Array]:
+    B = x.shape[0]
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k_new = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v_new = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    q = apply_rope(q, position[:, None], cfg.rope_theta)
+    k_new = apply_rope(k_new, position[:, None], cfg.rope_theta)
+    # in-place cache update at position
+    bidx = jnp.arange(B)
+    k = cache["k"].at[bidx, position].set(k_new[:, 0])
+    v = cache["v"].at[bidx, position].set(v_new[:, 0])
+    o = sdpa(q, k, v, causal_offset=None, kv_len=position + 1)
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    return dict(k=k, v=v), out
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2 multi-head latent attention)
+# ---------------------------------------------------------------------------
+
+
+def init_mla(key: Array, cfg, dtype) -> dict:
+    import repro.models.common as cm
+
+    d = cfg.d_model
+    H = cfg.n_heads
+    r = cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 8)
+    p = dict(
+        # down-projection to the kv latent + shared rope key
+        w_dkv=cm.dense_init(ks[0], d, r, dtype),
+        w_kr=cm.dense_init(ks[1], d, dr, dtype),
+        # up-projections from latent
+        w_uk=cm.dense_init(ks[2], r, H * dn, dtype).reshape(r, H, dn),
+        w_uv=cm.dense_init(ks[3], r, H * dv, dtype).reshape(r, H, dv),
+        wo=cm.dense_init(ks[4], H * dv, d, dtype).reshape(H, dv, d),
+    )
+    if cfg.q_lora_rank:
+        p["w_dq"] = cm.dense_init(ks[5], d, cfg.q_lora_rank, dtype)
+        p["w_uq"] = cm.dense_init(
+            ks[6], cfg.q_lora_rank, H * (dn + dr), dtype
+        ).reshape(cfg.q_lora_rank, H, dn + dr)
+    else:
+        p["wq"] = cm.dense_init(ks[7], d, H * (dn + dr), dtype).reshape(
+            d, H, dn + dr
+        )
+    return p
+
+
+def _mla_q(p: dict, x: Array, positions: Array, cfg) -> tuple[Array, Array]:
+    dn, dr = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    if cfg.q_lora_rank:
+        ql = jnp.einsum("bsd,dr->bsr", x, p["w_dq"])
+        q = jnp.einsum("bsr,rhk->bshk", ql, p["w_uq"])
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def mla_forward(
+    p: dict,
+    x: Array,
+    positions: Array,
+    cfg,
+    *,
+    use_kernel: bool = False,
+) -> Array:
+    """Training / prefill MLA: latent is expanded to per-head k, v."""
+    dn, dr = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    q_nope, q_rope = _mla_q(p, x, positions, cfg)
+    c_kv = jnp.einsum("bsd,dr->bsr", x, p["w_dkv"])  # [B, S, r]
+    k_rope = apply_rope(
+        jnp.einsum("bsd,dk->bsk", x, p["w_kr"])[:, :, None, :], positions,
+        cfg.rope_theta,
+    )  # [B, S, 1, dr] shared across heads
+    k_nope = jnp.einsum("bsr,rhk->bshk", c_kv, p["w_uk"])
+    v = jnp.einsum("bsr,rhk->bshk", c_kv, p["w_uv"])
+    H = cfg.n_heads
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, k_nope.shape[:3] + (dr,))], axis=-1
+    )
+    q = constrain(q, "dp", None, "tp", None)
+    k = constrain(k, "dp", None, "tp", None)
+    scale = 1.0 / math.sqrt(dn + dr)
+    o = sdpa(q, k, v, causal_offset=0, scale=scale, use_kernel=use_kernel,
+             unroll_chunks=not getattr(cfg, "scan_layers", True),
+             probs_dtype=jnp.bfloat16
+             if cfg.attn_probs_dtype == "bfloat16" else jnp.float32)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+
+
+def mla_init_cache(cfg, batch: int, s_max: int, dtype) -> dict:
+    return dict(
+        c_kv=jnp.zeros((batch, s_max, cfg.kv_lora_rank), dtype),
+        k_rope=jnp.zeros((batch, s_max, cfg.qk_rope_head_dim), dtype),
+    )
+
+
+def mla_decode(
+    p: dict,
+    cache: dict,
+    x: Array,  # [B, 1, D]
+    position: Array,  # [B]
+    cfg,
+) -> tuple[dict, Array]:
+    """Absorbed-form MLA decode: attention runs in the latent space.
+
+    score[t] = <W_uk^T q_nope, c_t> + <q_rope, k_rope_t>
+    out      = W_uv (sum_t p_t c_t)
+    so the per-step FLOPs and cache traffic scale with r + d_rope, not H*dh.
+    """
+    dn, dr = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    B = x.shape[0]
+    q_nope, q_rope = _mla_q(p, x, position[:, None], cfg)  # [B,1,H,*]
+    c_new = jnp.einsum("bsd,dr->bsr", x, p["w_dkv"])[:, 0]  # [B, r]
+    kr_new = apply_rope(
+        jnp.einsum("bsd,dk->bsk", x, p["w_kr"])[:, :, None, :],
+        position[:, None],
+        cfg.rope_theta,
+    )[:, 0, 0]  # [B, dr]
+    bidx = jnp.arange(B)
+    c_kv = cache["c_kv"].at[bidx, position].set(c_new)
+    k_rope = cache["k_rope"].at[bidx, position].set(kr_new)
+    # absorb: q_lat [B, H, r]
+    q_lat = jnp.einsum("bhk,rhk->bhr", q_nope[:, 0], p["w_uk"])
+    scores = jnp.einsum("bhr,btr->bht", q_lat.astype(jnp.float32),
+                        c_kv.astype(jnp.float32))
+    scores += jnp.einsum(
+        "bhk,btk->bht", q_rope[:, 0].astype(jnp.float32),
+        k_rope.astype(jnp.float32),
+    )
+    scores *= 1.0 / math.sqrt(dn + dr)
+    T = c_kv.shape[1]
+    valid = jnp.arange(T)[None, :] < (position + 1)[:, None]
+    scores = jnp.where(valid[:, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    o_lat = jnp.einsum("bht,btr->bhr", probs, c_kv.astype(jnp.float32))
+    o = jnp.einsum("bhr,rhk->bhk", o_lat, p["w_uv"].astype(jnp.float32))
+    out = jnp.einsum("bhk,hkd->bd", o.astype(x.dtype), p["wo"])[:, None]
+    return dict(c_kv=c_kv, k_rope=k_rope), out

@@ -1,0 +1,347 @@
+"""LM transformer: scan-over-layers, GQA or MLA attention, dense or MoE FFN.
+
+Layers are grouped into homogeneous *stages* (e.g. DeepSeek-V2: 1 dense
+layer then 26 MoE layers) so each stage scans over stacked params — keeping
+the HLO size O(1) in depth, which matters for 126-layer dry-run compiles.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+import repro.models.common as cm
+from repro.models.common import constrain, rms_norm
+from repro.models.transformer import attention as attn
+from repro.models.transformer import moe as moe_mod
+
+Array = jax.Array
+
+
+def _dtype(name: str):
+    return dict(float32=jnp.float32, bfloat16=jnp.bfloat16, float16=jnp.float16)[
+        name
+    ]
+
+
+def stages_of(cfg) -> list[tuple[int, str]]:
+    if cfg.moe is None:
+        return [(cfg.n_layers, "dense")]
+    fd = cfg.moe.first_dense_layers
+    out = []
+    if fd:
+        out.append((fd, "dense"))
+    out.append((cfg.n_layers - fd, "moe"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def _init_block(key: Array, cfg, kind: str, dtype) -> dict:
+    k_attn, k_ffn, k_n1, k_n2 = jax.random.split(key, 4)
+    if cfg.attention == "mla":
+        a = attn.init_mla(k_attn, cfg, dtype)
+    else:
+        a = attn.init_gqa(k_attn, cfg, dtype)
+    if kind == "moe":
+        f = moe_mod.init_moe(k_ffn, cfg, dtype)
+    else:
+        d_ff = (
+            cfg.moe.d_ff_dense
+            if (cfg.moe is not None and cfg.moe.d_ff_dense)
+            else cfg.d_ff
+        )
+        ks = jax.random.split(k_ffn, 3)
+        f = dict(
+            w_gate=cm.dense_init(ks[0], cfg.d_model, d_ff, dtype),
+            w_up=cm.dense_init(ks[1], cfg.d_model, d_ff, dtype),
+            w_down=cm.dense_init(ks[2], d_ff, cfg.d_model, dtype),
+        )
+    return dict(
+        attn=a,
+        ffn=f,
+        norm_attn=jnp.ones((cfg.d_model,), dtype),
+        norm_ffn=jnp.ones((cfg.d_model,), dtype),
+    )
+
+
+def init_lm(key: Array, cfg) -> dict:
+    dtype = _dtype(cfg.param_dtype)
+    k_embed, k_head, *_ = jax.random.split(key, 4)
+    params: dict[str, Any] = dict(
+        embed=(jax.random.normal(k_embed, (cfg.vocab, cfg.d_model)) * 0.02).astype(
+            dtype
+        ),
+        final_norm=jnp.ones((cfg.d_model,), dtype),
+    )
+    if not cfg.tie_embeddings:
+        params["lm_head"] = cm.dense_init(k_head, cfg.d_model, cfg.vocab, dtype)
+    for si, (depth, kind) in enumerate(stages_of(cfg)):
+        blocks = []
+        for li in range(depth):
+            kb = jax.random.fold_in(key, si * 1000 + li)
+            blocks.append(_init_block(kb, cfg, kind, dtype))
+        params[f"stage{si}"] = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *blocks
+        )
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+def _block_forward(blk: dict, x: Array, positions: Array, cfg, kind: str,
+                   use_kernel: bool) -> tuple[Array, Array]:
+    h = rms_norm(x, blk["norm_attn"], cfg.norm_eps)
+    if cfg.attention == "mla":
+        a = attn.mla_forward(blk["attn"], h, positions, cfg, use_kernel=use_kernel)
+    else:
+        a = attn.gqa_forward(blk["attn"], h, positions, cfg, use_kernel=use_kernel)
+    x = x + a
+    h = rms_norm(x, blk["norm_ffn"], cfg.norm_eps)
+    aux = jnp.zeros((), jnp.float32)
+    if kind == "moe":
+        f, aux = moe_mod.moe_forward(blk["ffn"], h, cfg)
+    else:
+        f = cm.swiglu(h, blk["ffn"]["w_gate"], blk["ffn"]["w_up"],
+                      blk["ffn"]["w_down"])
+    x = x + f
+    x = constrain(x, "dp", None, None)
+    return x, aux
+
+
+def lm_forward(
+    params: dict,
+    tokens: Array,  # int32 [B, S]
+    cfg,
+    *,
+    use_kernel: bool = False,
+    seq_shard: bool = False,
+    last_only: bool = False,
+) -> tuple[Array, Array]:
+    """Returns (logits [B, S, V] fp32, aux_loss); last_only -> [B, 1, V]."""
+    cdt = _dtype(cfg.compute_dtype)
+    B, S = tokens.shape
+    x = params["embed"][tokens].astype(cdt)
+    x = constrain(x, "dp", "tp" if seq_shard else None, None)
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    aux_total = jnp.zeros((), jnp.float32)
+
+    for si, (depth, kind) in enumerate(stages_of(cfg)):
+        stacked = params[f"stage{si}"]
+
+        def body(x, blk, kind=kind):
+            blk = cm.cast_tree(blk, cdt) if cfg.param_dtype != cfg.compute_dtype else blk
+            return _block_forward(blk, x, positions, cfg, kind, use_kernel)
+
+        if cfg.remat:
+            body = jax.checkpoint(body)
+
+        def scan_fn(x, blk):
+            x, aux = body(x, blk)
+            return x, aux
+
+        if cfg.scan_layers:
+            x, auxs = jax.lax.scan(scan_fn, x, stacked)
+            aux_total = aux_total + auxs.sum()
+        else:  # unrolled: every layer visible to cost_analysis (dry-run)
+            for li in range(depth):
+                blk = jax.tree_util.tree_map(lambda t: t[li], stacked)
+                x, aux = scan_fn(x, blk)
+                aux_total = aux_total + aux
+
+    if last_only:
+        x = x[:, -1:, :]  # serving: only the next-token logits matter
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params.get("lm_head", None)
+    if head is None:
+        head = params["embed"].T
+    ldt = _dtype(getattr(cfg, "logits_dtype", "float32"))
+    logits = jnp.einsum("bsd,dv->bsv", x, head.astype(cdt)).astype(ldt)
+    logits = constrain(logits, "dp", None, "tp")
+    return logits, aux_total
+
+
+def lm_loss(params: dict, batch: dict, cfg, *, use_kernel: bool = False):
+    """Causal-LM cross entropy.
+
+    batch: either {tokens [B, S+1]} (shift internally) or
+    {tokens [B, S], targets [B, S]} (pre-shifted by the data pipeline).
+    """
+    tokens = batch["tokens"]
+    if "targets" in batch:
+        inp, tgt = tokens, batch["targets"]
+    else:
+        inp, tgt = tokens[:, :-1], tokens[:, 1:]
+    logits, aux = lm_forward(params, inp, cfg, use_kernel=use_kernel)
+    # f32 accumulation fuses into the reduce; bf16 logits never hit HBM twice
+    logz = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    gold = jnp.take_along_axis(logits, tgt[..., None], axis=-1)[..., 0]
+    nll = (logz - gold.astype(jnp.float32)).mean()
+    return nll + aux, dict(nll=nll, aux=aux)
+
+
+# ---------------------------------------------------------------------------
+# Decode (serving)
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg, batch: int, s_max: int) -> list:
+    cdt = _dtype(cfg.compute_dtype)
+    if cfg.attention == "mla":
+        one = lambda: attn.mla_init_cache(cfg, batch, s_max, cdt)
+    else:
+        one = lambda: attn.gqa_init_cache(cfg, batch, s_max, cdt)
+    caches = []
+    for si, (depth, kind) in enumerate(stages_of(cfg)):
+        caches.append(
+            jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *[one() for _ in range(depth)])
+        )
+    return caches
+
+
+def lm_decode_step(
+    params: dict,
+    caches: list,
+    tokens: Array,  # int32 [B] current token
+    position: Array,  # int32 [B] its position
+    cfg,
+) -> tuple[list, Array]:
+    """One decode step; returns (new caches, logits [B, V])."""
+    cdt = _dtype(cfg.compute_dtype)
+    x = params["embed"][tokens][:, None, :].astype(cdt)  # [B, 1, D]
+    new_caches = []
+    for si, (depth, kind) in enumerate(stages_of(cfg)):
+        stacked = params[f"stage{si}"]
+        cache = caches[si]
+
+        def step(x, blk_cache, kind=kind):
+            blk, c = blk_cache
+            blk = cm.cast_tree(blk, cdt) if cfg.param_dtype != cfg.compute_dtype else blk
+            h = rms_norm(x, blk["norm_attn"], cfg.norm_eps)
+            if cfg.attention == "mla":
+                c, a = attn.mla_decode(blk["attn"], c, h, position, cfg)
+            else:
+                c, a = attn.gqa_decode(blk["attn"], c, h, position, cfg)
+            x = x + a
+            h = rms_norm(x, blk["norm_ffn"], cfg.norm_eps)
+            if kind == "moe":
+                f, _ = moe_mod.moe_forward(blk["ffn"], h, cfg)
+            else:
+                f = cm.swiglu(h, blk["ffn"]["w_gate"], blk["ffn"]["w_up"],
+                              blk["ffn"]["w_down"])
+            return x + f, c
+
+        if cfg.scan_layers:
+            x, new_cache = jax.lax.scan(step, x, (stacked, cache))
+        else:
+            outs = []
+            for li in range(depth):
+                blk = jax.tree_util.tree_map(lambda t: t[li], stacked)
+                c = jax.tree_util.tree_map(lambda t: t[li], cache)
+                x, c_new = step(x, (blk, c))
+                outs.append(c_new)
+            new_cache = jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs), *outs
+            )
+        new_caches.append(new_cache)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params.get("lm_head", params["embed"].T)
+    logits = jnp.einsum("bsd,dv->bsv", x, head.astype(cdt))[:, 0]
+    return new_caches, logits.astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Sharding specs
+# ---------------------------------------------------------------------------
+
+
+def param_specs(params: dict, cfg) -> dict:
+    """PartitionSpec tree: TP on heads/ffn/experts ('model'), FSDP on 'dp'.
+
+    Every rule is divisibility-guarded: a dim that does not divide the mesh
+    extent falls back to replication on that axis (e.g. 8 KV heads on a
+    16-way model axis -> KV projections replicated, the standard GQA layout
+    when Hkv < TP; 60 Qwen experts on 16-way EP -> shard the expert *matmul*
+    dims instead)."""
+    dp = cm.resolve_axis("dp")
+
+    def dpd(dim: int):
+        return cm.dp_if_divisible(dim)
+
+    def tpd(dim: int):
+        return cm.tp_if_divisible(dim)
+
+    def spec_for(path: tuple, leaf) -> P:
+        names = [getattr(p, "key", getattr(p, "idx", None)) for p in path]
+        key = names[-1] if names else None
+        pstr = "/".join(str(x) for x in names)
+        nd = leaf.ndim
+        stacked = pstr.startswith("stage")  # leading layer dim L
+        lead = (None,) if stacked else ()
+        sh = leaf.shape[1:] if stacked else leaf.shape
+        if key in ("embed",):
+            return P(tpd(sh[0]), dpd(sh[1]))
+        if key in ("lm_head",):
+            return P(dpd(sh[0]), tpd(sh[1]))
+        if key in ("final_norm", "norm_attn", "norm_ffn"):
+            return P(*lead, None)
+        if "shared" in pstr and key in ("w_gate", "w_up"):
+            return P(*lead, dpd(sh[0]), tpd(sh[1]))
+        if "shared" in pstr and key == "w_down":
+            return P(*lead, tpd(sh[0]), dpd(sh[1]))
+        if key in ("w_gate", "w_up", "w_down") and nd == (4 if stacked else 3):
+            # MoE experts [L, E, d, f]: expert-parallel on model when E
+            # divides; otherwise TP inside the expert matmuls
+            e_ax = tpd(sh[0])
+            if e_ax is not None:
+                return P(*lead, e_ax, dpd(sh[1]), None)
+            if key == "w_down":  # [E, f, d]
+                return P(*lead, None, tpd(sh[1]), dpd(sh[2]))
+            return P(*lead, None, dpd(sh[1]), tpd(sh[2]))
+        if key in ("w_gate", "w_up"):  # dense mlp [L, d, f]
+            return P(*lead, dpd(sh[0]), tpd(sh[1]))
+        if key == "w_down":
+            return P(*lead, tpd(sh[0]), dpd(sh[1]))
+        if key == "router":
+            return P(*lead, dpd(sh[0]), None)
+        # attention
+        if key in ("wq", "wk", "wv"):  # [L, d, H, dh]
+            return P(*lead, dpd(sh[0]), tpd(sh[1]), None)
+        if key == "wo":  # [L, H, dh, d]
+            return P(*lead, tpd(sh[0]), None, dpd(sh[2]))
+        if key in ("w_dkv", "w_kr", "w_dq"):  # [L, d, r]
+            return P(*lead, dpd(sh[0]), None)
+        if key in ("w_uk", "w_uv", "w_uq"):  # [L, r, H, dh]
+            return P(*lead, None, tpd(sh[1]), None)
+        return P(*([None] * nd))
+
+    return jax.tree_util.tree_map_with_path(spec_for, params)
+
+
+def cache_specs(caches, cfg) -> Any:
+    dp = cm.resolve_axis("dp")
+
+    def spec_for(path: tuple, leaf):
+        key = getattr(path[-1], "key", None)
+        if key in ("k", "v"):  # [L, B, S, Hkv, dh]
+            hkv_ax = cm.tp_if_divisible(leaf.shape[3])
+            if hkv_ax is not None:
+                return P(None, cm.dp_if_divisible(leaf.shape[1]), None, hkv_ax, None)
+            return P(None, cm.dp_if_divisible(leaf.shape[1]), None, None,
+                     cm.tp_if_divisible(leaf.shape[4]))
+        if key == "c_kv":  # [L, B, S, r] latent is shared across heads
+            return P(None, cm.dp_if_divisible(leaf.shape[1]), None,
+                     cm.tp_if_divisible(leaf.shape[3]))
+        if key == "k_rope":  # [L, B, S, dr]
+            return P(None, cm.dp_if_divisible(leaf.shape[1]), None, None)
+        return P(*([None] * leaf.ndim))
+
+    return jax.tree_util.tree_map_with_path(spec_for, caches)

@@ -1,0 +1,108 @@
+"""Mixture-of-Experts FFN with shared experts (DeepSeek-V2 / Qwen-MoE style).
+
+Sort-based capacity dispatch (production JAX MoE pattern, not the O(T*E*C)
+one-hot einsum): token->expert assignments are sorted by expert id, ranked
+within their expert group, and dropped past the capacity C.  Expert weights
+are stacked [E, ...] and sharded on the ``model`` axis (expert parallelism);
+the gather/scatter across the token (data) and expert (model) shardings is
+partitioned by XLA into the canonical all-to-all pair.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+import repro.models.common as cm
+from repro.models.common import constrain
+
+Array = jax.Array
+
+
+def init_moe(key: Array, cfg, dtype) -> dict:
+    m = cfg.moe
+    d = cfg.d_model
+    f = m.d_ff_expert
+    E = m.n_routed
+    ks = jax.random.split(key, 7)
+    p = dict(
+        router=cm.dense_init(ks[0], d, E, jnp.float32),
+        w_gate=jax.random.normal(ks[1], (E, d, f)).astype(dtype) * (d**-0.5),
+        w_up=jax.random.normal(ks[2], (E, d, f)).astype(dtype) * (d**-0.5),
+        w_down=jax.random.normal(ks[3], (E, f, d)).astype(dtype) * (f**-0.5),
+    )
+    shared_w = m.d_ff_shared or m.n_shared * m.d_ff_expert
+    if shared_w:
+        p["shared"] = dict(
+            w_gate=cm.dense_init(ks[4], d, shared_w, dtype),
+            w_up=cm.dense_init(ks[5], d, shared_w, dtype),
+            w_down=cm.dense_init(ks[6], shared_w, d, dtype),
+        )
+    return p
+
+
+def _capacity(tokens: int, cfg) -> int:
+    m = cfg.moe
+    c = int(tokens * m.top_k / m.n_routed * m.capacity_factor)
+    return max(8, (c + 7) // 8 * 8)
+
+
+def moe_forward(p: dict, x: Array, cfg) -> tuple[Array, Array]:
+    """x: [B, S, D] -> (out [B, S, D], aux_loss scalar)."""
+    m = cfg.moe
+    B, S, D = x.shape
+    T = B * S
+    K = m.top_k
+    E = m.n_routed
+    C = _capacity(T, cfg)
+    xf = x.reshape(T, D)
+
+    logits = jnp.einsum("td,de->te", xf.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_i = jax.lax.top_k(probs, K)  # [T, K]
+    if m.norm_topk_prob:
+        top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    # --- sort-based dispatch -------------------------------------------------
+    e_flat = top_i.reshape(-1)  # [T*K]
+    sort_idx = jnp.argsort(e_flat)  # XLA sort is stable
+    e_sorted = e_flat[sort_idx]
+    tok_sorted = sort_idx // K
+    gate_sorted = top_p.reshape(-1)[sort_idx]
+    group_start = jnp.searchsorted(e_sorted, jnp.arange(E))
+    rank = jnp.arange(T * K) - group_start[e_sorted]
+    keep = rank < C
+    rank_c = rank.clip(0, C - 1)
+    # token buffer [E, C] (sentinel T -> zero row)
+    buf = jnp.full((E, C), T, dtype=jnp.int32)
+    buf = buf.at[e_sorted, rank_c].set(
+        jnp.where(keep, tok_sorted, T).astype(jnp.int32)
+    )
+    gate_buf = jnp.zeros((E, C), jnp.float32)
+    gate_buf = gate_buf.at[e_sorted, rank_c].add(jnp.where(keep, gate_sorted, 0.0))
+
+    xa = jnp.concatenate([xf, jnp.zeros((1, D), xf.dtype)], axis=0)
+    xe = xa[buf]  # [E, C, D]
+    xe = constrain(xe, "tp", None, None)
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, p["w_gate"])) * jnp.einsum(
+        "ecd,edf->ecf", xe, p["w_up"]
+    )
+    ye = jnp.einsum("ecf,efd->ecd", h, p["w_down"])  # [E, C, D]
+    ye = ye * gate_buf[..., None].astype(ye.dtype)
+
+    out = jnp.zeros((T + 1, D), ye.dtype)
+    out = out.at[buf.reshape(-1)].add(ye.reshape(E * C, D))
+    out = out[:T].reshape(B, S, D)
+    out = constrain(out, "dp", None, None)
+
+    # shared experts (always-on)
+    if "shared" in p:
+        sh = p["shared"]
+        out = out + cm.swiglu(x, sh["w_gate"], sh["w_up"], sh["w_down"])
+
+    # load-balance aux loss (Switch): E * sum_e f_e * P_e
+    assign_frac = jnp.mean(
+        (jax.nn.one_hot(top_i, E, dtype=jnp.float32)).sum(1), axis=0
+    ) / K
+    prob_frac = probs.mean(axis=0)
+    aux = E * jnp.sum(assign_frac * prob_frac) * m.router_aux_weight
+    return out, aux

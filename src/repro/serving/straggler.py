@@ -1,0 +1,81 @@
+"""Straggler mitigation for distributed query serving.
+
+On a large mesh a single slow/failed worker stalls the whole SPMD step.
+Mitigations implemented here (host-side policy around the jit'd step):
+
+* **deadline + retry**: dispatch with a wall-clock deadline; on miss, retry
+  on the replica group (queries are pure -> idempotent);
+* **hedged dispatch**: optionally launch the same batch on two replica
+  groups and take the first result (classic tail-latency hedging);
+* **work shedding**: under deadline pressure, reduce the walk budget of the
+  retry (ProbeSim is an anytime estimator — fewer walks = graceful accuracy
+  degradation, bounded by Thm 1 with the reduced n_r).
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass
+from typing import Callable
+
+
+@dataclass
+class HedgePolicy:
+    deadline_s: float = 5.0
+    max_retries: int = 2
+    shed_factor: float = 0.5  # walk-budget multiplier per retry
+    hedge: bool = False
+
+
+class DeadlineError(TimeoutError):
+    pass
+
+
+def run_with_deadline(fn: Callable, *args, deadline_s: float, **kwargs):
+    """Run fn in a worker thread; raise DeadlineError if it misses."""
+    result: list = []
+    err: list = []
+
+    def work():
+        try:
+            result.append(fn(*args, **kwargs))
+        except Exception as e:  # pragma: no cover - propagated below
+            err.append(e)
+
+    t = threading.Thread(target=work, daemon=True)
+    t.start()
+    t.join(timeout=deadline_s)
+    if err:
+        raise err[0]
+    if not result:
+        raise DeadlineError(f"missed {deadline_s}s deadline")
+    return result[0]
+
+
+def dispatch(
+    fn: Callable,
+    *args,
+    policy: HedgePolicy,
+    budget_key: str = "budget_walks",
+    budget: int | None = None,
+    on_retry: Callable[[int], None] | None = None,
+    **kwargs,
+):
+    """Deadline + retry-with-shedding wrapper around a query function."""
+    attempt = 0
+    cur_budget = budget
+    while True:
+        try:
+            if cur_budget is not None:
+                kwargs[budget_key] = max(1, int(cur_budget))
+            return run_with_deadline(
+                fn, *args, deadline_s=policy.deadline_s, **kwargs
+            )
+        except DeadlineError:
+            attempt += 1
+            if attempt > policy.max_retries:
+                raise
+            if on_retry is not None:
+                on_retry(attempt)
+            if cur_budget is not None:
+                cur_budget = int(cur_budget * policy.shed_factor)

@@ -1,0 +1,57 @@
+"""Train-step factory: value_and_grad + AdamW (+ microbatch accumulation,
+optional gradient compression for cross-pod links)."""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def make_train_step(
+    loss_fn: Callable,
+    optimizer,
+    *,
+    microbatches: int = 1,
+    grad_transform: Callable | None = None,
+):
+    """loss_fn(params, batch) -> (loss, metrics).
+
+    Returns step(params, opt_state, batch) -> (params, opt_state, metrics).
+    With ``microbatches`` > 1 the leading batch dim is split and gradients
+    accumulated in a scan (activation memory / global-batch decoupling).
+    ``grad_transform`` hooks gradient compression (training/compression.py).
+    """
+
+    vg = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def step(params, opt_state, batch):
+        if microbatches == 1:
+            (loss, metrics), grads = vg(params, batch)
+        else:
+            def split(x):
+                return x.reshape((microbatches, x.shape[0] // microbatches)
+                                 + x.shape[1:])
+
+            mb = jax.tree_util.tree_map(split, batch)
+
+            def body(acc, b):
+                (l, m), g = vg(params, b)
+                acc_g, acc_l = acc
+                acc_g = jax.tree_util.tree_map(jnp.add, acc_g, g)
+                return (acc_g, acc_l + l), m
+
+            zero_g = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            (grads, loss_sum), ms = jax.lax.scan(body, (zero_g, 0.0), mb)
+            grads = jax.tree_util.tree_map(lambda g: g / microbatches, grads)
+            loss = loss_sum / microbatches
+            metrics = jax.tree_util.tree_map(lambda x: x.mean(), ms)
+        if grad_transform is not None:
+            grads = grad_transform(grads)
+        params, opt_state, opt_metrics = optimizer.update(grads, opt_state, params)
+        metrics = dict(metrics, loss=loss, **opt_metrics)
+        return params, opt_state, metrics
+
+    return step

@@ -1,0 +1,52 @@
+"""Small pytree helpers: a frozen-dataclass pytree decorator.
+
+Usage::
+
+    @struct
+    class Foo:
+        x: jax.Array                 # pytree leaf
+        n: int = static()            # static / aux field
+
+Static fields participate in the pytree treedef (so they can differ between
+traced calls without shape confusion) and are hashable.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, TypeVar
+
+import jax
+
+_T = TypeVar("_T")
+
+_STATIC_MARK = "__repro_static__"
+
+
+def static(default: Any = dataclasses.MISSING, **kwargs):
+    """Mark a dataclass field as static (pytree aux data)."""
+    metadata = dict(kwargs.pop("metadata", {}) or {})
+    metadata[_STATIC_MARK] = True
+    if default is dataclasses.MISSING:
+        return dataclasses.field(metadata=metadata, **kwargs)
+    return dataclasses.field(default=default, metadata=metadata, **kwargs)
+
+
+def struct(cls: type[_T]) -> type[_T]:
+    """Decorator: frozen dataclass registered as a JAX pytree."""
+    cls = dataclasses.dataclass(frozen=True)(cls)
+    data_fields = []
+    meta_fields = []
+    for f in dataclasses.fields(cls):
+        if f.metadata.get(_STATIC_MARK, False):
+            meta_fields.append(f.name)
+        else:
+            data_fields.append(f.name)
+    jax.tree_util.register_dataclass(
+        cls, data_fields=data_fields, meta_fields=meta_fields
+    )
+
+    def replace(self, **updates):
+        return dataclasses.replace(self, **updates)
+
+    cls.replace = replace  # type: ignore[attr-defined]
+    return cls

@@ -1,0 +1,109 @@
+"""Arch-bundle API consistency: input specs/shardings trees match, shapes
+honor the assignment, applicability rules, and the params accounting."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro import arch
+from repro.configs.base import ARCH_IDS, LM_SHAPES, get_config, shapes_for
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_input_specs_and_shardings_align(arch_id):
+    for shape in shapes_for(arch_id):
+        if not arch.is_applicable(arch_id, shape.name)[0]:
+            continue
+        b = arch.build(arch_id, shape.name, smoke=True)
+        specs = b.input_specs()
+        shards = b.input_shardings()
+        s1 = jax.tree_util.tree_structure(specs)
+        s2 = jax.tree_util.tree_structure(
+            shards, is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec)
+        )
+        assert s1 == s2, f"{arch_id}/{shape.name}: spec/sharding trees differ"
+        # every PartitionSpec rank covers its array rank
+        flat_specs = jax.tree_util.tree_leaves(specs)
+        flat_shards = jax.tree_util.tree_leaves(
+            shards, is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec)
+        )
+        for sds, ps in zip(flat_specs, flat_shards):
+            assert len(ps) <= len(sds.shape)
+
+
+def test_assignment_shapes_exact():
+    lm = {s.name: s.dims for s in LM_SHAPES}
+    assert lm["train_4k"] == dict(seq_len=4096, global_batch=256)
+    assert lm["prefill_32k"] == dict(seq_len=32768, global_batch=32)
+    assert lm["decode_32k"] == dict(seq_len=32768, global_batch=128)
+    assert lm["long_500k"] == dict(seq_len=524288, global_batch=1)
+    gnn = {s.name: s.dims for s in shapes_for("gcn-cora")}
+    assert gnn["full_graph_sm"]["n_nodes"] == 2708
+    assert gnn["minibatch_lg"]["n_edges"] == 114_615_892
+    assert gnn["ogb_products"]["n_nodes"] == 2_449_029
+    rec = {s.name: s.dims for s in shapes_for("wide-deep")}
+    assert rec["train_batch"]["batch"] == 65536
+    assert rec["retrieval_cand"]["n_candidates"] == 1_000_000
+
+
+def test_long_500k_skip_rule():
+    for a in ["llama3-405b", "yi-34b", "llama3.2-1b", "deepseek-v2-lite-16b",
+              "qwen2-moe-a2.7b"]:
+        ok, why = arch.is_applicable(a, "long_500k")
+        assert not ok and "full-attention" in why
+    assert arch.is_applicable("gcn-cora", "full_graph_sm") == (True, "")
+
+
+def test_model_flops_positive_and_scaled():
+    b_small = arch.build("llama3.2-1b", "train_4k")
+    b_big = arch.build("llama3-405b", "train_4k")
+    assert 0 < b_small.model_flops() < b_big.model_flops()
+    # 6ND sanity: 405B x 1.05M tokens x 6
+    assert b_big.model_flops() == pytest.approx(
+        6 * b_big.cfg.params_active * 256 * 4096, rel=1e-6
+    )
+
+
+def test_moe_active_params_below_dense():
+    cfg = get_config("deepseek-v2-lite-16b")
+    assert cfg.params_active < cfg.params_dense / 3
+
+
+def test_truncation_shift_is_one_sided(toy, key):
+    from repro.core import make_params, simrank_power, single_source
+
+    truth = np.asarray(simrank_power(toy["g"], c=0.25, iters=60))[0]
+    p0 = make_params(toy["n"], c=0.25, eps_a=0.1, n_r_override=2048)
+    p1 = make_params(toy["n"], c=0.25, eps_a=0.1, n_r_override=2048,
+                     truncation_shift=True)
+    e0 = np.asarray(single_source(key, toy["g"], toy["eg"], 0, p0))
+    e1 = np.asarray(single_source(key, toy["g"], toy["eg"], 0, p1))
+    # shift adds eps_t/2 to every reached node
+    reached = (e0 > 0) & (np.arange(8) != 0)
+    np.testing.assert_allclose(e1[reached] - e0[reached], p1.eps_t / 2,
+                               atol=1e-6)
+    # both stay within the bound
+    for e in (e0, e1):
+        err = np.abs(e - truth); err[0] = 0
+        assert err.max() <= 0.1
+
+
+def test_walk_termination_rate_matches_sqrt_c(key):
+    """Each live step continues w.p. sqrt(c) (Def. 3) — statistical check on
+    a graph where every node has in-degree > 0."""
+    from repro.core import sample_walks
+    from repro.graph import ell_from_edges
+
+    n = 64
+    src = np.arange(n, dtype=np.int32)
+    dst = ((np.arange(n) + 1) % n).astype(np.int32)  # a big cycle
+    eg = ell_from_edges(src, dst, n)
+    sqrt_c = 0.7
+    walks = np.asarray(
+        sample_walks(key, eg, 0, n_r=20_000, max_len=6, sqrt_c=sqrt_c)
+    )
+    alive1 = (walks[:, 1] < n).mean()  # continued past step 1
+    assert alive1 == pytest.approx(sqrt_c, abs=0.02)
+    alive2 = (walks[:, 2] < n).mean()
+    assert alive2 == pytest.approx(sqrt_c**2, abs=0.02)

@@ -1,0 +1,121 @@
+"""Baselines + pooling protocol: MC expert precision, TSF bias on cyclic
+graphs, pooling evaluation mechanics, metrics sanity."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    build_oneway_index,
+    build_pool,
+    evaluate_with_pool,
+    mc_pool_scores,
+    mc_single_pair,
+    simrank_power,
+    tsf_single_source,
+)
+from repro.core.metrics import kendall_tau, ndcg_at_k, precision_at_k
+from repro.graph import ell_from_edges, graph_from_edges, toy_graph
+
+
+def test_mc_single_pair_converges(toy, key):
+    truth = np.asarray(simrank_power(toy["g"], c=0.25, iters=60))
+    est = float(mc_single_pair(key, toy["eg"], 0, 3, r=20_000, max_len=16,
+                               sqrt_c=0.5))
+    assert est == pytest.approx(truth[0, 3], abs=0.01)
+
+
+def test_mc_pool_scores_match_truth(toy, key):
+    truth = np.asarray(simrank_power(toy["g"], c=0.25, iters=60))
+    pool = jnp.arange(1, 8, dtype=jnp.int32)
+    scores = np.asarray(
+        mc_pool_scores(key, toy["eg"], jnp.int32(0), pool, r=8000, max_len=16,
+                       sqrt_c=0.5)
+    )
+    np.testing.assert_allclose(scores, truth[0, 1:8], atol=0.02)
+
+
+def test_tsf_overestimates_on_cyclic_graph(key):
+    """TSF sums meet probabilities over steps (not FIRST meets) — on a graph
+    where reverse walks coincide forever after the first meeting this
+    overestimates unboundedly (the paper's §2.3 critique).
+
+    Graph: h -> a, h -> b, h <-> x.  Reverse walks from a and b both go
+    a/b -> h -> x -> h -> ... deterministically: true s(a,b) = c (first
+    meet), but TSF counts a meet at EVERY step: sum_i c^i >> c."""
+    src = np.array([2, 2, 3, 2], dtype=np.int32)
+    dst = np.array([0, 1, 2, 3], dtype=np.int32)
+    g = graph_from_edges(src, dst, 4)
+    eg = ell_from_edges(src, dst, 4)
+    truth = np.asarray(simrank_power(g, c=0.8, iters=80))
+    assert truth[0, 1] == pytest.approx(0.8, abs=1e-6)
+    idx = build_oneway_index(jax.random.key(1), eg, r_g=50)
+    est = np.asarray(
+        tsf_single_source(jax.random.key(2), idx, eg, jnp.int32(0),
+                          r_q=5, t=12, c=0.8)
+    )
+    assert est[1] > truth[0, 1] + 0.5, (est[1], truth[0, 1])
+
+
+def test_pooling_protocol_end_to_end(toy, key):
+    truth = np.asarray(simrank_power(toy["g"], c=0.25, iters=60))[0]
+    good = np.argsort(-np.where(np.arange(8) == 0, -1.0, truth))[:3]
+    bad = np.array([7, 6, 5], dtype=np.int32)
+    out = evaluate_with_pool(
+        key, toy["eg"], 0, {"good": good.astype(np.int32), "bad": bad}, 3,
+        expert_r=4000, sqrt_c=0.5, max_len=12,
+    )
+    assert out["good"]["precision"] >= out["bad"]["precision"]
+    assert out["good"]["ndcg"] >= out["bad"]["ndcg"]
+    pool = build_pool({"a": good.astype(np.int32), "b": bad})
+    assert set(pool) == set(good) | set(bad)
+
+
+def test_metrics_definitions():
+    truth = np.array([0.0, 0.5, 0.4, 0.3, 0.2, 0.1])
+    true_top = np.array([1, 2, 3])
+    assert precision_at_k(np.array([1, 2, 3]), true_top) == 1.0
+    assert precision_at_k(np.array([1, 2, 5]), true_top) == pytest.approx(2 / 3)
+    assert ndcg_at_k(np.array([1, 2, 3]), truth, true_top) == pytest.approx(1.0)
+    assert ndcg_at_k(np.array([3, 2, 1]), truth, true_top) < 1.0
+    assert kendall_tau(np.array([1, 2, 3]), truth) == 1.0
+    assert kendall_tau(np.array([3, 2, 1]), truth) == -1.0
+
+
+def test_anytime_accuracy_improves_with_budget(toy, key):
+    """Serving's work-shedding contract: more walks -> lower error (Thm 1)."""
+    from repro.core import make_params, single_source
+
+    truth = np.asarray(simrank_power(toy["g"], c=0.25, iters=60))[0]
+    errs = []
+    for n_r in [64, 4096]:
+        p = make_params(toy["n"], c=0.25, eps_a=0.1, n_r_override=n_r)
+        est = np.asarray(
+            single_source(key, toy["g"], toy["eg"], 0, p, variant="telescoped")
+        )
+        e = np.abs(est - truth); e[0] = 0
+        errs.append(e.max())
+    assert errs[1] < errs[0]
+
+
+def test_mla_cache_smaller_than_gqa_cache():
+    """The MLA latent cache is the arch's memory win — assert it."""
+    from repro.configs.base import TransformerConfig
+    from repro.models.transformer import model as M
+
+    mla = TransformerConfig(
+        name="m", n_layers=2, d_model=64, n_heads=16, n_kv_heads=16,
+        d_head=128, d_ff=128, vocab=64, attention="mla", kv_lora_rank=64,
+        qk_nope_head_dim=128, qk_rope_head_dim=32, v_head_dim=128,
+        param_dtype="float32", compute_dtype="float32", remat=False,
+    )
+    gqa = TransformerConfig(
+        name="g", n_layers=2, d_model=64, n_heads=16, n_kv_heads=16,
+        d_head=128, d_ff=128, vocab=64,
+        param_dtype="float32", compute_dtype="float32", remat=False,
+    )
+    size = lambda c: sum(
+        x.size for x in jax.tree_util.tree_leaves(M.init_cache(c, 2, 128))
+    )
+    assert size(mla) * 10 < size(gqa)  # 512+... vs 2*16*128 per token

@@ -1,0 +1,156 @@
+"""Graph substrate: structs, dynamic updates, partition, sampler, io."""
+import os
+import tempfile
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.graph import (
+    csr_from_edges,
+    ell_from_edges,
+    erdos_renyi_graph,
+    graph_from_edges,
+    graph_to_host_edges,
+    powerlaw_graph,
+    push_coo,
+    push_ell,
+)
+from repro.graph.dynamic import (
+    delete_edges,
+    delete_edges_ell,
+    insert_edges,
+    insert_edges_ell,
+)
+from repro.graph.io import read_edgelist, write_edgelist
+from repro.graph.partition import (
+    edge_balance_stats,
+    partition_edges_by_dst,
+    partition_nodes,
+)
+from repro.graph.sampler import block_shapes, sample_blocks
+
+
+def test_push_coo_equals_push_ell(small_powerlaw, rng):
+    g, eg, n = small_powerlaw["g"], small_powerlaw["eg"], small_powerlaw["n"]
+    x = jnp.asarray(rng.normal(size=(n, 4)).astype(np.float32))
+    w = jnp.asarray(rng.uniform(0.1, 1, n).astype(np.float32))
+    a = push_coo(g, x, weights=w)
+    b = push_ell(eg, x, weights=w)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+def test_degrees_consistent(small_powerlaw):
+    src, dst, n = small_powerlaw["src"], small_powerlaw["dst"], small_powerlaw["n"]
+    g = small_powerlaw["g"]
+    np.testing.assert_array_equal(
+        np.asarray(g.in_deg), np.bincount(dst, minlength=n)[:n]
+    )
+    np.testing.assert_array_equal(
+        np.asarray(g.out_deg), np.bincount(src, minlength=n)[:n]
+    )
+
+
+def test_dynamic_insert_then_delete_roundtrip(toy):
+    g, eg = toy["g"], toy["eg"]
+    g = graph_from_edges(toy["src"], toy["dst"], toy["n"],
+                         capacity=len(toy["src"]) + 16)
+    eg2 = ell_from_edges(toy["src"], toy["dst"], toy["n"], k_max=8)
+    new_s = jnp.array([5, 6], dtype=jnp.int32)
+    new_d = jnp.array([0, 1], dtype=jnp.int32)
+    g2 = insert_edges(g, new_s, new_d)
+    e2 = insert_edges_ell(eg2, new_s, new_d)
+    assert int(g2.num_edges) == int(g.num_edges) + 2
+    assert int(e2.in_deg[0]) == int(eg2.in_deg[0]) + 1
+    g3 = delete_edges(g2, new_s, new_d)
+    e3 = delete_edges_ell(e2, new_s, new_d)
+    assert int(g3.num_edges) == int(g.num_edges)
+    np.testing.assert_array_equal(np.asarray(e3.in_deg), np.asarray(eg2.in_deg))
+    # push results identical to the original graph after the round-trip
+    x = jnp.ones((toy["n"], 2), jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(push_coo(g3, x)), np.asarray(push_coo(g, x)), atol=1e-6
+    )
+
+
+def test_dynamic_updates_change_probe_results(toy, key):
+    """Index-free freshness: queries reflect updates immediately."""
+    from repro.core import make_params, single_source
+
+    params = make_params(toy["n"], c=0.25, eps_a=0.1, n_r_override=512)
+    g = graph_from_edges(toy["src"], toy["dst"], toy["n"],
+                         capacity=len(toy["src"]) + 8)
+    eg = ell_from_edges(toy["src"], toy["dst"], toy["n"], k_max=8)
+    before = np.asarray(single_source(key, g, eg, 0, params, variant="tree"))
+    # add edges f->a, f->b: creates fresh 2-step meeting paths
+    g2 = insert_edges(g, jnp.array([5, 5], jnp.int32), jnp.array([0, 1], jnp.int32))
+    eg2 = insert_edges_ell(eg, jnp.array([5, 5], jnp.int32),
+                           jnp.array([0, 1], jnp.int32))
+    after = np.asarray(single_source(key, g2, eg2, 0, params, variant="tree"))
+    assert not np.allclose(before, after)
+
+
+def test_partition_by_dst_roundtrip(small_powerlaw):
+    src, dst, n = small_powerlaw["src"], small_powerlaw["dst"], small_powerlaw["n"]
+    part = partition_edges_by_dst(src, dst, n, 4)
+    assert part["src_sh"].shape[0] == 4
+    # every live edge appears exactly once with a correctly localized dst
+    total = 0
+    for s in range(4):
+        live = part["src_sh"][s] < part["n_pad"]
+        total += live.sum()
+        glob_dst = part["dst_sh"][s][live] + s * part["rows"]
+        assert (glob_dst // part["rows"] == s).all()
+    assert total == len(src)
+    stats = edge_balance_stats(part["counts"])
+    assert stats["imbalance"] >= 1.0
+
+
+def test_partition_nodes_shapes():
+    vals = np.arange(10, dtype=np.float32)
+    out = partition_nodes(vals, 4)
+    assert out.shape == (4, 3)
+    np.testing.assert_array_equal(out.reshape(-1)[:10], vals)
+
+
+def test_sampler_shapes_and_validity(small_powerlaw, rng):
+    src, dst, n = small_powerlaw["src"], small_powerlaw["dst"], small_powerlaw["n"]
+    csr_in = csr_from_edges(src, dst, n, by="dst")
+    seeds = rng.choice(n, 8, replace=False).astype(np.int32)
+    blocks = sample_blocks(csr_in, seeds, (3, 2), rng)
+    shapes = block_shapes(8, (3, 2))
+    assert blocks.nodes.shape[0] == shapes["table"]
+    for h, e in enumerate(shapes["edges"]):
+        assert blocks.edge_src[h].shape[0] == e
+        # sampled srcs are real in-neighbors where live
+        live = blocks.edge_mask[h]
+        s_pos = blocks.edge_src[h][live]
+        d_pos = blocks.edge_dst[h][live]
+        for sp, dp in list(zip(s_pos[:20], d_pos[:20])):
+            v = blocks.nodes[dp]
+            u = blocks.nodes[sp]
+            assert u in csr_in.neighbors(int(v))
+
+
+def test_edgelist_io_roundtrip(tmp_path):
+    src = np.array([0, 1, 2], dtype=np.int32)
+    dst = np.array([1, 2, 0], dtype=np.int32)
+    p = os.path.join(tmp_path, "g.txt")
+    write_edgelist(p, src, dst)
+    s2, d2, n = read_edgelist(p)
+    np.testing.assert_array_equal(np.sort(s2), np.sort(src))
+    assert n == 3
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(10, 80), m=st.integers(10, 300), seed=st.integers(0, 99))
+def test_property_generators_produce_simple_graphs(n, m, seed):
+    src, dst, n = powerlaw_graph(n, m, seed=seed)
+    assert (src != dst).all()  # no self loops
+    key = src.astype(np.int64) * n + dst
+    assert len(np.unique(key)) == len(key)  # no duplicates
+    assert src.min() >= 0 and dst.max() < n

@@ -1,0 +1,186 @@
+"""ProbeSim estimator correctness: variant agreement, unbiasedness, error
+bounds (Thm 1/2) and pruning behaviour — including hypothesis property tests
+over random graphs."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    build_prefix_tree,
+    estimate_walk_reference,
+    make_params,
+    probe_tree_levels,
+    probe_walks_telescoped,
+    sample_walks,
+    simrank_power,
+    single_source,
+    topk,
+    tree_stats,
+    walk_lengths,
+)
+from repro.graph import ell_from_edges, erdos_renyi_graph, graph_from_edges
+
+
+def test_params_budget():
+    p = make_params(10_000, c=0.6, eps_a=0.1, delta=0.01)
+    assert p.eps + (1 + p.eps) / (1 - p.sqrt_c) * p.eps_p + p.eps_t / 2 <= p.eps_a + 1e-9
+    assert p.n_r > 0 and p.max_len >= 2
+    # n_r formula: 3c/eps^2 ln(n/delta)
+    import math
+
+    want = math.ceil(3 * 0.6 / p.eps**2 * math.log(10_000 / 0.01))
+    assert p.n_r == want
+
+
+def test_walks_start_at_u_and_terminate(toy, key):
+    walks = sample_walks(key, toy["eg"], 2, n_r=500, max_len=8, sqrt_c=0.7)
+    w = np.asarray(walks)
+    assert (w[:, 0] == 2).all()
+    n = toy["n"]
+    # once sentinel, always sentinel
+    dead = w == n
+    assert ((~dead[:, 1:]) | dead[:, 1:] >= dead[:, :-1]).all()
+    lens = np.asarray(walk_lengths(walks, n))
+    assert lens.min() >= 1
+    # mean length ~ 1/(1-sqrt_c) in expectation (truncation shortens a bit)
+    assert 1.5 < lens.mean() < 5.0
+
+
+def test_telescoped_equals_reference_random(small_powerlaw, key):
+    g = small_powerlaw["g"]
+    eg = small_powerlaw["eg"]
+    u = int(np.argmax(np.asarray(g.in_deg)))
+    walks = sample_walks(key, eg, u, n_r=16, max_len=7, sqrt_c=0.775)
+    tele = probe_walks_telescoped(g, walks, sqrt_c=0.775)
+    for k in range(4):
+        ref = estimate_walk_reference(g, walks[k], 0.775)
+        np.testing.assert_allclose(
+            np.asarray(tele[:, k]), np.asarray(ref), atol=1e-5
+        )
+
+
+def test_tree_variant_equals_telescoped(small_powerlaw, key):
+    g, eg, n = small_powerlaw["g"], small_powerlaw["eg"], small_powerlaw["n"]
+    u = int(np.argmax(np.asarray(g.in_deg)))
+    walks = sample_walks(key, eg, u, n_r=64, max_len=7, sqrt_c=0.775)
+    tele_sum = probe_walks_telescoped(g, walks, sqrt_c=0.775).sum(axis=1)
+    tree = build_prefix_tree(np.asarray(walks), n)
+    tree_sum = probe_tree_levels(
+        g,
+        tuple(jnp.asarray(x) for x in tree.nodes),
+        tuple(jnp.asarray(x) for x in tree.weights),
+        tuple(jnp.asarray(x) for x in tree.parent),
+        tuple(jnp.asarray(x) for x in tree.parent_node),
+        sqrt_c=0.775,
+    )
+    np.testing.assert_allclose(
+        np.asarray(tree_sum), np.asarray(tele_sum), atol=1e-4
+    )
+    st_ = tree_stats(tree)
+    assert st_["total_columns"] <= 64 * 7
+
+
+def test_error_bound_toy(toy, key):
+    truth = np.asarray(simrank_power(toy["g"], c=0.25, iters=60))[0]
+    params = make_params(toy["n"], c=0.25, eps_a=0.1, delta=0.01)
+    est = np.asarray(
+        single_source(key, toy["g"], toy["eg"], 0, params, variant="tree")
+    )
+    err = np.abs(est - truth)
+    err[0] = 0
+    assert err.max() <= params.eps_a, f"maxerr {err.max()}"
+
+
+def test_pruning_only_reduces_scores(toy, key):
+    params = make_params(toy["n"], c=0.25, eps_a=0.1)
+    walks = sample_walks(key, toy["eg"], 0, n_r=64, max_len=6, sqrt_c=0.5)
+    no_prune = probe_walks_telescoped(toy["g"], walks, sqrt_c=0.5)
+    pruned = probe_walks_telescoped(
+        toy["g"], walks, sqrt_c=0.5, eps_p=0.02
+    )
+    diff = np.asarray(no_prune - pruned)
+    assert diff.min() >= -1e-6  # one-sided
+    # per-walk error bounded by eps_p per prefix; coarse bound: L * eps_p
+    assert diff.max() <= 6 * 0.02 + 1e-6
+
+
+def test_randomized_probe_unbiased(toy, key):
+    from repro.core.probe_random import randomized_probe_walk
+
+    walk = jnp.array([0, 1, 0, 1, 8, 8], dtype=jnp.int32)  # (a,b,a,b)
+    det = estimate_walk_reference(toy["g"], walk[:4], 0.5)
+    trials = 3000
+    keys = jax.random.split(key, trials)
+    batch = jax.vmap(lambda k: randomized_probe_walk(k, toy["eg"], walk,
+                                                     sqrt_c=0.5, max_len=6))(keys)
+    acc = np.asarray(batch).mean(axis=0)
+    np.testing.assert_allclose(acc, np.asarray(det), atol=0.03)
+
+
+def test_topk(toy, key):
+    truth = np.asarray(simrank_power(toy["g"], c=0.25, iters=60))[0]
+    params = make_params(toy["n"], c=0.25, eps_a=0.05)
+    idx, vals = topk(key, toy["g"], toy["eg"], 0, 3, params, variant="tree")
+    idx = np.asarray(idx)
+    true_top = np.argsort(-np.where(np.arange(8) == 0, -1, truth))[:3]
+    # Def 2 guarantee: returned scores are eps_a-close to the true i-th best
+    true_sorted = np.sort(truth[true_top])[::-1]
+    for i in range(3):
+        assert truth[idx[i]] >= true_sorted[i] - params.eps_a
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    n=st.integers(20, 60),
+    m_mult=st.integers(2, 6),
+    seed=st.integers(0, 10_000),
+    c=st.sampled_from([0.25, 0.6, 0.8]),
+)
+def test_property_telescoped_equals_reference(n, m_mult, seed, c):
+    """Invariant: telescoped probe == sum of per-prefix Alg.2 probes."""
+    src, dst, n = erdos_renyi_graph(n, n * m_mult, seed=seed)
+    if len(src) == 0:
+        return
+    g = graph_from_edges(src, dst, n)
+    eg = ell_from_edges(src, dst, n)
+    key = jax.random.key(seed)
+    sqrt_c = float(np.sqrt(c))
+    walks = sample_walks(key, eg, int(dst[0]), n_r=4, max_len=6, sqrt_c=sqrt_c)
+    tele = probe_walks_telescoped(g, walks, sqrt_c=sqrt_c)
+    for k in range(2):
+        ref = estimate_walk_reference(g, walks[k], sqrt_c)
+        np.testing.assert_allclose(
+            np.asarray(tele[:, k]), np.asarray(ref), atol=1e-5
+        )
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_property_estimates_are_probabilities(seed):
+    """Per-walk estimates lie in [0, 1] (Thm 1's boundedness argument)."""
+    src, dst, n = erdos_renyi_graph(40, 160, seed=seed)
+    g = graph_from_edges(src, dst, n)
+    eg = ell_from_edges(src, dst, n)
+    key = jax.random.key(seed)
+    walks = sample_walks(key, eg, int(dst[0]), n_r=32, max_len=8, sqrt_c=0.775)
+    tele = np.asarray(probe_walks_telescoped(g, walks, sqrt_c=0.775))
+    assert tele.min() >= -1e-6
+    # each per-walk estimate s~_k(u, v) is itself a probability (Thm 1 proof)
+    assert tele.max() <= 1.0 + 1e-5
+
+
+def test_auto_variant_matches_truth(toy, key):
+    """'auto' (best-of-both-worlds switch, §4.4) stays within the bound."""
+    truth = np.asarray(simrank_power(toy["g"], c=0.25, iters=60))[0]
+    params = make_params(toy["n"], c=0.25, eps_a=0.1, delta=0.01,
+                         n_r_override=4096)
+    est = np.asarray(
+        single_source(key, toy["g"], toy["eg"], 0, params, variant="auto")
+    )
+    err = np.abs(est - truth)
+    err[0] = 0
+    assert err.max() <= params.eps_a

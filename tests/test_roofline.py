@@ -1,0 +1,80 @@
+"""Roofline analysis unit tests: HLO collective parsing with while-trip
+weighting, shape-byte accounting, and term classification."""
+import numpy as np
+
+from repro.launch.mesh import HW
+from repro.roofline.analysis import (
+    RooflineReport,
+    _shape_bytes,
+    parse_collectives,
+)
+
+SAMPLE_HLO = """
+HloModule jit_f, entry_computation_layout={...}
+
+%add (x: f32[], y: f32[]) -> f32[] {
+  ROOT %add.5 = f32[] add(%x, %y)
+}
+
+%body (p: (s32[], f32[32,512])) -> (s32[], f32[32,512]) {
+  %dot.4 = f32[32,512]{1,0} dot(%a, %b)
+  %all-reduce.3 = f32[32,512]{1,0} all-reduce(%dot.4), channel_id=1, to_apply=%add
+  ROOT %tuple.15 = (s32[], f32[32,512]{1,0}) tuple(%c, %all-reduce.3)
+}
+
+%cond (p: (s32[], f32[32,512])) -> pred[] {
+  %constant.22 = s32[] constant(5)
+  ROOT %lt = pred[] compare(%i, %constant.22), direction=LT
+}
+
+ENTRY %main (param: f32[32,512]) -> f32[32,512] {
+  %ag = f32[64,512]{1,0} all-gather(%param), dimensions={0}
+  %while.11 = (s32[], f32[32,512]{1,0}) while(%t), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"5"}}
+  ROOT %gte = f32[32,512]{1,0} get-tuple-element(%while.11), index=1
+}
+"""
+
+
+def test_shape_bytes():
+    assert _shape_bytes("f32[32,512]") == 32 * 512 * 4
+    assert _shape_bytes("bf16[8,128]") == 8 * 128 * 2
+    assert _shape_bytes("(f32[4], s32[2])") == 16 + 8
+    assert _shape_bytes("pred[]") == 1
+
+
+def test_parse_collectives_weights_while_bodies():
+    out = parse_collectives(SAMPLE_HLO)
+    # all-reduce inside the while body: 5 iterations x 32*512*4 bytes
+    assert out["by_kind"]["all-reduce"] == 5 * 32 * 512 * 4
+    assert out["counts"]["all-reduce"] == 5
+    # all-gather at entry: once, result buffer 64*512*4
+    assert out["by_kind"]["all-gather"] == 64 * 512 * 4
+    assert out["counts"]["all-gather"] == 1
+
+
+def test_parse_skips_async_done_pairs():
+    txt = """
+ENTRY %main (p: f32[8]) -> f32[8] {
+  %s = f32[8]{0} all-reduce-start(%p), channel_id=1
+  %d = f32[8]{0} all-reduce-done(%s)
+  ROOT %r = f32[8]{0} add(%d, %d)
+}
+"""
+    out = parse_collectives(txt)
+    assert out["counts"]["all-reduce"] == 1
+    assert out["by_kind"]["all-reduce"] == 8 * 4
+
+
+def test_roofline_terms_and_bottleneck():
+    rep = RooflineReport(
+        arch="x", shape="y", mesh="single", chips=256,
+        hlo_flops=197e12,  # exactly 1 second of compute
+        hlo_bytes=819e9 * 0.5,
+        collective_bytes=50e9 * 2.0,
+        model_flops=197e12 * 256 * 0.7,
+    ).finalize(HW)
+    assert abs(rep.compute_s - 1.0) < 1e-9
+    assert abs(rep.memory_s - 0.5) < 1e-9
+    assert abs(rep.collective_s - 2.0) < 1e-9
+    assert rep.bottleneck == "collective"
+    assert abs(rep.useful_flops_ratio - 0.7) < 1e-9

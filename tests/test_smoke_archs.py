@@ -1,0 +1,99 @@
+"""Per-architecture smoke tests (deliverable f): every assigned arch x shape
+cell instantiates a REDUCED config and runs one step on CPU, asserting
+output shapes and no NaNs."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro import arch
+from repro.configs.base import ARCH_IDS, shapes_for
+
+RNG = np.random.default_rng(0)
+
+
+def synth_inputs(bundle):
+    def fill(path, sds):
+        k = getattr(path[-1], "key", "")
+        if k == "key":
+            return jax.random.key_data(jax.random.key(1)).astype(sds.dtype)
+        if sds.dtype == jnp.int32:
+            if k == "labels":
+                return jnp.asarray(RNG.integers(0, 2, sds.shape).astype(np.int32))
+            if k in ("src", "dst", "graph_ids", "queries"):
+                return jnp.asarray(RNG.integers(0, 8, sds.shape).astype(np.int32))
+            if k == "positions":
+                return jnp.zeros(sds.shape, jnp.int32)
+            if k == "cand_ids":
+                return jnp.asarray(
+                    (np.arange(int(np.prod(sds.shape))) % 100).astype(np.int32)
+                ).reshape(sds.shape)
+            return jnp.asarray(RNG.integers(0, 64, sds.shape).astype(np.int32))
+        if sds.dtype == jnp.bool_:
+            return jnp.ones(sds.shape, bool)
+        return jnp.asarray(RNG.normal(size=sds.shape).astype(sds.dtype))
+
+    return {
+        name: jax.tree_util.tree_map_with_path(fill, tree)
+        for name, tree in bundle.input_specs().items()
+    }
+
+
+CELLS = [
+    (a, s.name)
+    for a in ARCH_IDS
+    for s in shapes_for(a)
+    if arch.is_applicable(a, s.name)[0]
+]
+
+
+@pytest.mark.parametrize("arch_id,shape_name", CELLS)
+def test_smoke_cell(arch_id, shape_name):
+    b = arch.build(arch_id, shape_name, smoke=True)
+    state = b.init(jax.random.key(0))
+    out = b.step(*state, **synth_inputs(b))
+    leaves = jax.tree_util.tree_leaves(out)
+    assert leaves, "step produced no outputs"
+    for x in leaves:
+        if jnp.issubdtype(x.dtype, jnp.floating):
+            assert bool(jnp.isfinite(x).all()), f"non-finite output in {arch_id}"
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_full_configs_have_exact_literature_numbers(arch_id):
+    cfg = arch.get_config(arch_id)
+    expected = {
+        "deepseek-v2-lite-16b": dict(n_layers=27, d_model=2048, n_heads=16,
+                                     vocab=102400, kv_lora_rank=512),
+        "qwen2-moe-a2.7b": dict(n_layers=24, d_model=2048, n_heads=16,
+                                vocab=151936),
+        "llama3-405b": dict(n_layers=126, d_model=16384, n_heads=128,
+                            n_kv_heads=8, d_ff=53248, vocab=128256),
+        "yi-34b": dict(n_layers=60, d_model=7168, n_heads=56, n_kv_heads=8,
+                       d_ff=20480, vocab=64000),
+        "llama3.2-1b": dict(n_layers=16, d_model=2048, n_heads=32,
+                            n_kv_heads=8, d_ff=8192, vocab=128256),
+        "gin-tu": dict(n_layers=5, d_hidden=64),
+        "gcn-cora": dict(n_layers=2, d_hidden=16),
+        "gatedgcn": dict(n_layers=16, d_hidden=70),
+        "nequip": dict(n_layers=5, d_hidden=32, l_max=2, n_rbf=8, cutoff=5.0),
+        "wide-deep": dict(n_sparse=40, embed_dim=32, mlp=(1024, 512, 256)),
+        "probesim": dict(c=0.6, eps_a=0.1),
+    }[arch_id]
+    for k, v in expected.items():
+        assert getattr(cfg, k) == v, f"{arch_id}.{k}"
+    if arch_id == "deepseek-v2-lite-16b":
+        assert cfg.moe.n_routed == 64 and cfg.moe.top_k == 6 and cfg.moe.n_shared == 2
+        assert cfg.moe.d_ff_expert == 1408
+    if arch_id == "qwen2-moe-a2.7b":
+        assert cfg.moe.n_routed == 60 and cfg.moe.top_k == 4
+        assert cfg.moe.d_ff_shared == 5632
+
+
+def test_param_count_estimates_sane():
+    cfg = arch.get_config("llama3-405b")
+    assert 380e9 < cfg.params_dense < 430e9
+    ds = arch.get_config("deepseek-v2-lite-16b")
+    assert 12e9 < ds.params_dense < 20e9
+    assert 2e9 < ds.params_active < 4e9

@@ -1,0 +1,73 @@
+"""SO(3) machinery property tests: rotation equivariance of the real CG
+tensor products and spherical harmonics (the NequIP substrate)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.models.gnn.so3 import cg_real, real_sh, tp_paths
+
+RNG = np.random.default_rng(0)
+
+
+def _rand_rot(rng):
+    A = rng.normal(size=(3, 3))
+    Q, _ = np.linalg.qr(A)
+    if np.linalg.det(Q) < 0:
+        Q[:, 0] *= -1
+    return Q
+
+
+def _wigner(l, R, rng, npts=64):
+    v = rng.normal(size=(npts, 3))
+    v /= np.linalg.norm(v, axis=1, keepdims=True)
+    Y = real_sh(l, v)
+    YR = real_sh(l, v @ R.T)
+    D, *_ = np.linalg.lstsq(Y, YR, rcond=None)
+    return D.T
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_wigner_matrices_orthogonal(seed):
+    rng = np.random.default_rng(seed)
+    R = _rand_rot(rng)
+    for l in range(3):
+        D = _wigner(l, R, rng)
+        np.testing.assert_allclose(D @ D.T, np.eye(2 * l + 1), atol=1e-8)
+
+
+@pytest.mark.parametrize("path", tp_paths(2))
+def test_tensor_product_equivariance(path):
+    l1, l2, l3 = path
+    rng = np.random.default_rng(hash(path) % 2**31)
+    R = _rand_rot(rng)
+    C = cg_real(l1, l2, l3)
+    D1, D2, D3 = (_wigner(l, R, rng) for l in (l1, l2, l3))
+    a = rng.normal(size=2 * l1 + 1)
+    b = rng.normal(size=2 * l2 + 1)
+    lhs = np.einsum("abc,a,b->c", C, D1 @ a, D2 @ b)
+    rhs = D3 @ np.einsum("abc,a,b->c", C, a, b)
+    np.testing.assert_allclose(lhs, rhs, atol=1e-10)
+
+
+def test_sh_orthonormality():
+    """Monte-Carlo check of <Y_lm, Y_l'm'> = delta on the sphere."""
+    rng = np.random.default_rng(1)
+    v = rng.normal(size=(200_000, 3))
+    v /= np.linalg.norm(v, axis=1, keepdims=True)
+    Ys = [real_sh(l, v) for l in range(3)]
+    allY = np.concatenate(Ys, axis=1)  # [P, 9]
+    gram = 4 * np.pi * (allY.T @ allY) / len(v)
+    np.testing.assert_allclose(gram, np.eye(9), atol=0.05)
+
+
+def test_cg_selection_rules():
+    # paths violating |l1-l2| <= l3 <= l1+l2 are identically zero
+    from repro.models.gnn.so3 import cg_complex
+
+    assert np.abs(cg_complex(1, 1, 3)).max() == 0.0
+    assert np.abs(cg_complex(0, 0, 1)).max() == 0.0
+    # scalar x scalar -> scalar is the identity coupling
+    c = cg_real(0, 0, 0)
+    assert c.shape == (1, 1, 1) and abs(abs(c[0, 0, 0]) - 1.0) < 1e-12

@@ -1,0 +1,194 @@
+"""Training substrate: optimizer, train step, compression, checkpointing,
+data pipeline, serving engine + straggler policy."""
+import os
+import time
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.checkpointer import AsyncCheckpointer, latest_step, restore, save
+from repro.data.pipeline import PrefetchPipeline
+from repro.training.compression import TopKErrorFeedback, int8_compress
+from repro.training.optimizer import AdamW, constant_schedule, warmup_cosine_schedule
+from repro.training.step import make_train_step
+
+
+def _quad_loss(params, batch):
+    err = params["w"] - batch["target"]
+    loss = jnp.sum(err * err)
+    return loss, dict(err=loss)
+
+
+def test_adamw_converges_on_quadratic():
+    opt = AdamW(schedule=constant_schedule(0.1), weight_decay=0.0)
+    params = dict(w=jnp.zeros(4))
+    state = opt.init(params)
+    batch = dict(target=jnp.array([1.0, -2.0, 3.0, 0.5]))
+    step = make_train_step(_quad_loss, opt)
+    for _ in range(300):
+        params, state, metrics = step(params, state, batch)
+    np.testing.assert_allclose(np.asarray(params["w"]),
+                               np.asarray(batch["target"]), atol=1e-2)
+
+
+def test_grad_clip_and_schedule():
+    opt = AdamW(schedule=warmup_cosine_schedule(1e-3, 10, 100), clip_norm=1.0)
+    params = dict(w=jnp.ones(3) * 100)
+    state = opt.init(params)
+    grads = dict(w=jnp.ones(3) * 1e6)
+    _, state2, m = opt.update(grads, state, params)
+    assert float(m["grad_norm"]) > 1e5
+    assert float(m["lr"]) == pytest.approx(1e-4, rel=1e-3)  # warmup step 1
+
+
+def test_microbatch_accumulation_matches_full_batch():
+    opt = AdamW(schedule=constant_schedule(0.01), weight_decay=0.0)
+
+    def loss_fn(params, batch):
+        pred = batch["x"] @ params["w"]
+        loss = jnp.mean((pred - batch["y"]) ** 2)
+        return loss, dict()
+
+    rng = np.random.default_rng(0)
+    batch = dict(
+        x=jnp.asarray(rng.normal(size=(8, 4)).astype(np.float32)),
+        y=jnp.asarray(rng.normal(size=(8,)).astype(np.float32)),
+    )
+    params = dict(w=jnp.zeros(4))
+    s_full = make_train_step(loss_fn, opt)
+    s_micro = make_train_step(loss_fn, opt, microbatches=4)
+    p1, _, m1 = s_full(params, opt.init(params), batch)
+    p2, _, m2 = s_micro(params, opt.init(params), batch)
+    # microbatch mean-of-means == full mean here (equal microbatch sizes)
+    np.testing.assert_allclose(np.asarray(p1["w"]), np.asarray(p2["w"]),
+                               atol=1e-5)
+
+
+def test_int8_compress_small_relative_error():
+    rng = np.random.default_rng(0)
+    g = dict(w=jnp.asarray(rng.normal(size=(64, 64)).astype(np.float32)))
+    gq = int8_compress(g)
+    err = np.abs(np.asarray(gq["w"]) - np.asarray(g["w"])).max()
+    assert err <= float(jnp.abs(g["w"]).max()) / 127.0 + 1e-6
+
+
+def test_topk_error_feedback_conserves_mass():
+    ef = TopKErrorFeedback(fraction=0.1)
+    g = dict(w=jnp.arange(100, dtype=jnp.float32))
+    res = ef.init(g)
+    sent, res = ef(g, res)
+    # sent + residual == original
+    np.testing.assert_allclose(
+        np.asarray(sent["w"]) + np.asarray(res["w"]), np.asarray(g["w"]),
+        atol=1e-6,
+    )
+    assert float((np.asarray(sent["w"]) != 0).mean()) <= 0.11
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    state = dict(
+        a=jnp.arange(10, dtype=jnp.float32),
+        nested=dict(b=jnp.ones((3, 3), jnp.bfloat16), step=jnp.asarray(7)),
+    )
+    path = os.path.join(tmp_path, "ckpt_5")
+    save(path, state, step=5, extra=dict(note="x"))
+    like = jax.tree_util.tree_map(jnp.zeros_like, state)
+    restored, manifest = restore(path, like)
+    assert manifest["step"] == 5
+    np.testing.assert_array_equal(np.asarray(restored["a"]),
+                                  np.asarray(state["a"]))
+    assert restored["nested"]["b"].dtype == jnp.bfloat16
+
+
+def test_async_checkpointer_gc_and_latest(tmp_path):
+    ck = AsyncCheckpointer(str(tmp_path), keep=2)
+    state = dict(x=jnp.ones(4))
+    for s in [1, 2, 3]:
+        ck.save(state, step=s, block=True)
+    assert latest_step(str(tmp_path)) == 3
+    names = sorted(os.listdir(tmp_path))
+    assert names == ["ckpt_2", "ckpt_3"]
+    out = ck.restore_latest(dict(x=jnp.zeros(4)))
+    assert out is not None and out[1]["step"] == 3
+
+
+def test_train_restart_resumes_bitwise(tmp_path):
+    """Full FT loop: fail mid-run, restart, final state matches a clean run."""
+    from repro.launch.train import train
+
+    d1 = os.path.join(tmp_path, "a")
+    with pytest.raises(RuntimeError):
+        train("gcn-cora", "full_graph_sm", smoke=True, steps=9,
+              ckpt_dir=d1, ckpt_every=3, fail_at=7)
+    out1 = train("gcn-cora", "full_graph_sm", smoke=True, steps=9,
+                 ckpt_dir=d1, ckpt_every=3)
+    out2 = train("gcn-cora", "full_graph_sm", smoke=True, steps=9,
+                 ckpt_dir=None, ckpt_every=10**9)
+    p1 = out1["state"][0]
+    p2 = out2["state"][0]
+    for a, b in zip(jax.tree_util.tree_leaves(p1), jax.tree_util.tree_leaves(p2)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), atol=1e-5)
+
+
+def test_prefetch_pipeline_deterministic_and_ordered():
+    made = []
+
+    def mk(step):
+        made.append(step)
+        return dict(step=np.asarray(step))
+
+    pipe = PrefetchPipeline(mk, start_step=3, prefetch=2)
+    got = []
+    for step, batch in pipe:
+        got.append((step, int(batch["step"])))
+        if len(got) == 4:
+            break
+    pipe.close()
+    assert got == [(3, 3), (4, 4), (5, 5), (6, 6)]
+
+
+def test_straggler_dispatch_sheds_budget():
+    from repro.serving.straggler import DeadlineError, HedgePolicy, dispatch
+
+    calls = []
+
+    def slow_then_fast(budget_walks=None):
+        calls.append(budget_walks)
+        if len(calls) == 1:
+            time.sleep(0.5)
+        return budget_walks
+
+    out = dispatch(
+        slow_then_fast,
+        policy=HedgePolicy(deadline_s=0.2, max_retries=2, shed_factor=0.5),
+        budget=100,
+    )
+    assert out == 50  # second attempt ran with shed budget
+    with pytest.raises(DeadlineError):
+        dispatch(
+            lambda budget_walks=None: time.sleep(1.0),
+            policy=HedgePolicy(deadline_s=0.05, max_retries=0),
+            budget=10,
+        )
+
+
+def test_serving_engine_end_to_end(key):
+    from repro.graph import ell_from_edges, graph_from_edges, powerlaw_graph
+    from repro.serving.engine import SimRankEngine
+
+    src, dst, n = powerlaw_graph(300, 2500, seed=0)
+    in_deg = np.bincount(dst, minlength=n)
+    g = graph_from_edges(src, dst, n, capacity=len(src) + 64)
+    eg = ell_from_edges(src, dst, n, k_max=int(in_deg.max()) + 8)
+    eng = SimRankEngine(g, eg, eps_a=0.2, top_k=5, walk_chunk=128)
+    u = int(np.argmax(in_deg))
+    res = eng.run_query(u, budget_walks=256)
+    assert len(res.topk_nodes) == 5
+    assert u not in res.topk_nodes
+    eng.insert(np.array([1, 2], np.int32), np.array([u, u], np.int32))
+    res2 = eng.run_query(u, budget_walks=256)
+    assert eng.stats.updates == 2 and eng.stats.queries == 2
