@@ -1,0 +1,142 @@
+"""Serving throughput: seed-style serial drain vs the fused batched drain.
+
+Protocol (acceptance: fused >= 5x serial queries/sec at Q = 16 on the
+bench_large quick config, CPU):
+
+* graph: the ``bench_large.py`` quick config (livejournal stand-in,
+  scale 0.004 — n ~ 19k, m ~ 90k, heavy-hub in-degree profile);
+* Q = 16 queries drawn by the paper protocol, anytime walk budget per query
+  (512 quick / 2048 full);
+* **serial** replicates the seed engine's ``drain()`` exactly: one query at
+  a time, a host chunk loop of ``walk_chunk`` walks with separate
+  ``sample_walks`` / ``probe_walks_telescoped`` dispatches per chunk,
+  surplus-walk masking in the final chunk, then ``top_k``;
+* **fused** is ``SimRankEngine.drain()`` on the multi-query serve path: the
+  whole batch in one compiled step (pooled sampling + compacted telescoped
+  probe + top-k, DESIGN.md §3).
+
+Results land in ``benchmarks.common.RESULTS['serve']`` and are written to
+``BENCH_serve.json`` by ``run.py`` (or by ``__main__`` here).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import RESULTS, emit, pick_query_nodes
+from repro.core import make_params
+from repro.core.probe import probe_walks_telescoped
+from repro.core.walks import sample_walks
+from repro.graph import ell_from_edges, graph_from_edges, paper_dataset
+from repro.serving.engine import SimRankEngine
+
+C = 0.6
+Q = 16
+TOP_K = 50
+SEED_WALK_CHUNK = 256  # the seed engine's default
+
+
+def _seed_serial_query(key, g, eg, params, u, *, budget, walk_chunk, top_k):
+    """The seed ``SimRankEngine._single_source`` + ``run_query``, verbatim:
+    host chunk loop, two dispatches per chunk, surplus masking, top-k."""
+    total = jnp.zeros(g.n, jnp.float32)
+    done = 0
+    while done < budget:
+        key, sub = jax.random.split(key)
+        walks = sample_walks(
+            sub, eg, u, n_r=walk_chunk, max_len=params.max_len,
+            sqrt_c=params.sqrt_c,
+        )
+        live = min(walk_chunk, budget - done)
+        if live < walk_chunk:
+            walks = walks.at[live:, :].set(g.n)
+        cols = probe_walks_telescoped(
+            g, walks, sqrt_c=params.sqrt_c, eps_p=params.eps_p
+        )
+        total = total + cols.sum(axis=1)
+        done += live
+    est = total / budget
+    est = est.at[u].set(-jnp.inf)
+    vals, idx = jax.lax.top_k(est, top_k)
+    return np.asarray(idx), np.asarray(vals)
+
+
+def run(quick: bool = True) -> dict:
+    name, scale = ("livejournal", 0.004)  # bench_large quick config
+    budget = 512 if quick else 2048
+    src, dst, n = paper_dataset(name, scale=scale)
+    g = graph_from_edges(src, dst, n)
+    in_deg = np.asarray(g.in_deg)
+    eg = ell_from_edges(src, dst, n, k_max=int(in_deg.max()) + 1)
+    queries = pick_query_nodes(in_deg, Q)
+    params = make_params(n, c=C, eps_a=0.1, delta=0.01)
+    key = jax.random.key(0)
+
+    # --- serial: the seed algorithm, one query at a time -------------------
+    # warm the compile caches on one query, then time the full batch
+    _seed_serial_query(key, g, eg, params, int(queries[0]),
+                       budget=budget, walk_chunk=SEED_WALK_CHUNK, top_k=TOP_K)
+    t0 = time.time()
+    serial_results = [
+        _seed_serial_query(jax.random.fold_in(key, i), g, eg, params, int(u),
+                           budget=budget, walk_chunk=SEED_WALK_CHUNK,
+                           top_k=TOP_K)
+        for i, u in enumerate(queries)
+    ]
+    t_serial = time.time() - t0
+    qps_serial = Q / t_serial
+
+    # --- fused: batched drain through the multi-query serve step -----------
+    eng = SimRankEngine(g, eg, c=C, eps_a=0.1, walk_chunk=SEED_WALK_CHUNK,
+                        top_k=TOP_K, batch_q=Q, seed=0)
+    for u in queries:  # warm-up drain compiles the fused step for this shape
+        eng.submit(int(u))
+    eng.drain(budget_walks=budget)
+    for u in queries:
+        eng.submit(int(u))
+    t0 = time.time()
+    fused_results = eng.drain(budget_walks=budget)
+    t_fused = time.time() - t0
+    qps_fused = Q / t_fused
+    speedup = qps_fused / qps_serial
+
+    # sanity: both paths rank the same strong neighbors (estimates are
+    # independent Monte-Carlo draws, so compare top-sets loosely)
+    overlap = np.mean([
+        len(set(serial_results[i][0][:10]) & set(fused_results[i].topk_nodes[:10])) / 10
+        for i in range(Q)
+    ])
+
+    emit(f"serve/{name}/serial_drain_q{Q}", t_serial / Q * 1e6,
+         f"qps={qps_serial:.3f};budget={budget}")
+    emit(f"serve/{name}/fused_drain_q{Q}", t_fused / Q * 1e6,
+         f"qps={qps_fused:.3f};budget={budget};speedup={speedup:.2f}x;"
+         f"top10_overlap={overlap:.2f}")
+    RESULTS["serve"] = dict(
+        dataset=name,
+        scale=scale,
+        n=int(n),
+        m=int(len(src)),
+        queries=Q,
+        budget_walks=budget,
+        walk_chunk=SEED_WALK_CHUNK,
+        top_k=TOP_K,
+        serial_qps=qps_serial,
+        fused_qps=qps_fused,
+        speedup=speedup,
+        serial_s_per_query=t_serial / Q,
+        fused_s_per_query=t_fused / Q,
+        top10_overlap=float(overlap),
+    )
+    return RESULTS["serve"]
+
+
+if __name__ == "__main__":
+    from benchmarks.common import write_json
+
+    run(quick=True)
+    write_json("BENCH_serve.json", quick=True, suites=["serve"])

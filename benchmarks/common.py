@@ -1,6 +1,7 @@
-"""Shared benchmark utilities: timed runs + CSV emission."""
+"""Shared benchmark utilities: timed runs + CSV emission + JSON export."""
 from __future__ import annotations
 
+import json
 import time
 
 import numpy as np
@@ -8,12 +9,34 @@ import numpy as np
 import jax
 
 ROWS: list[str] = []
+RESULTS: dict = {}  # structured results (e.g. the serve suite's qps numbers)
 
 
 def emit(name: str, us_per_call: float, derived: str = "") -> None:
     row = f"{name},{us_per_call:.1f},{derived}"
     ROWS.append(row)
     print(row, flush=True)
+
+
+def write_json(path: str, *, quick: bool, suites: list[str]) -> None:
+    """Machine-readable dump: structured RESULTS + every emitted CSV row."""
+    rows = []
+    for row in ROWS:
+        name, us, derived = row.split(",", 2)
+        rows.append({"name": name, "us_per_call": float(us),
+                     "derived": derived})
+    payload = dict(
+        quick=quick,
+        suites=suites,
+        backend=jax.default_backend(),
+        results=dict(RESULTS),
+        rows=rows,
+    )
+    if "serve" in RESULTS:  # promoted: the acceptance artifact consumers read
+        payload["serve"] = RESULTS["serve"]
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"# wrote {path}", flush=True)
 
 
 def timed(fn, *args, reps: int = 1, **kwargs):

@@ -1,32 +1,48 @@
 """Benchmark harness entry: one module per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit).
-``--full`` runs paper-scale sweeps; default is the CPU-quick profile.
+Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit) and
+writes a machine-readable ``BENCH_serve.json`` (serving queries/sec for the
+serial vs fused-batched drain, plus every emitted row — e.g. the kernel
+timings).  ``--full`` runs paper-scale sweeps; default (``--quick``) is the
+CPU-quick profile.
 """
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 import time
+
+# allow both `python -m benchmarks.run` and `python benchmarks/run.py`
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--quick", action="store_true",
+                    help="CPU-quick profile (the default; negates --full)")
     ap.add_argument("--only", default=None,
-                    help="comma list: abserror,topk,large,dynamic,kernels")
+                    help="comma list: serve,abserror,topk,large,dynamic,kernels")
+    ap.add_argument("--json", default=None,
+                    help="machine-readable output path; by default "
+                         "BENCH_serve.json is written iff the serve suite ran "
+                         "(so other suites never clobber the serve artifact)")
     args = ap.parse_args()
-    quick = not args.full
+    quick = not args.full or args.quick
 
     from benchmarks import (
         bench_abserror,
         bench_dynamic,
         bench_kernels,
         bench_large,
+        bench_serve,
         bench_topk,
     )
+    from benchmarks.common import write_json
 
     suites = dict(
+        serve=bench_serve.run,
         abserror=bench_abserror.run,
         topk=bench_topk.run,
         large=bench_large.run,
@@ -40,6 +56,11 @@ def main() -> None:
         print(f"# suite: {name}", file=sys.stderr)
         suites[name](quick=quick)
     print(f"# total {time.time() - t0:.1f}s", file=sys.stderr)
+    json_path = args.json
+    if json_path is None and "serve" in chosen:
+        json_path = "BENCH_serve.json"
+    if json_path:
+        write_json(json_path, quick=quick, suites=chosen)
 
 
 if __name__ == "__main__":

@@ -3,6 +3,8 @@
 Public API:
     make_params         error-budget accounting (Thm 1 + 2)
     single_source       approximate single-source SimRank (Alg. 1 + §4)
+    multi_source        fused multi-query serve path (one compiled step)
+    multi_source_topk   fused batched top-k (Def. 2)
     topk                approximate top-k SimRank (Def. 2)
     sample_walks        sqrt(c)-walk generation (Def. 3)
     simrank_power       ground-truth Power Method (small graphs)
@@ -11,6 +13,7 @@ Public API:
     evaluate_with_pool  pooling evaluation (§6.2)
 """
 from repro.core.montecarlo import mc_pool_scores, mc_single_pair, mc_single_source
+from repro.core.multisource import multi_source, multi_source_topk
 from repro.core.params import ProbeSimParams, make_params
 from repro.core.pooling import build_pool, evaluate_with_pool, pooled_ground_truth
 from repro.core.power import (
@@ -35,6 +38,8 @@ __all__ = [
     "make_params",
     "single_source",
     "single_source_simple",
+    "multi_source",
+    "multi_source_topk",
     "topk",
     "sample_walks",
     "walk_lengths",

@@ -1,0 +1,262 @@
+"""Fused multi-query ProbeSim serving path (DESIGN.md §3).
+
+The seed query path was host-bound: each walk chunk was two separate jitted
+dispatches (``sample_walks`` then ``probe_walks_telescoped``) with a host
+round-trip between chunks, every query ran alone, and every walk paid
+``max_len - 1`` full-width push levels even though the mean sqrt(c)-walk is
+only ~1/(1 - sqrt(c)) nodes long.  ``multi_source`` replaces all of that with
+ONE compiled step per query batch:
+
+* **query batching across the lane dimension** — Q queries share a single
+  [n + 1, W] score buffer; each query owns a contiguous block of W/Q lane
+  columns, so every push level is one SpMM dispatch for the whole batch;
+* **pooled walk sampling** — the entire walk pool (Q x n_r walks) is drawn
+  by one vmapped sampler call inside the same jit.  Per-chunk sampling pays
+  a large fixed dispatch cost (the ELL-table walk); pooling amortizes it;
+* **compacted walk scheduling** — instead of marching all lanes through the
+  same global level p (leaving columns of short/dead walks pushing zeros for
+  most levels), each lane column runs the telescoped probe of *its own* walk
+  at its own position.  When a column's walk finishes (position 1), its
+  telescoped estimate is deposited into a per-column accumulator and the
+  column is refilled with the next walk from its query's pool partition.
+  Total push work drops from ``n_r * (max_len - 1)`` column-levels per query
+  to ``n_r * E[len - 1]`` — the dominant term of the measured speedup;
+* **baked sentinel dump row** — score buffers are allocated once as
+  [n + 1, W] (row n = dump row), so sentinel scatter/gather indices need no
+  clipping and the SpMM kernel path never re-pads ``scores``
+  (``push_level_padded`` / ``spmm_ell_padded``);
+* **fused epilogue** — per-query segment reduction (lane-block sum), the
+  1/n_r normalization, the diagonal fix-up and ``lax.top_k`` all run inside
+  the same compiled step, with the [Q, n] accumulator donated by the caller.
+
+Per-column correctness: for a single walk of length l, the batched telescoped
+probe reduces to "for p = l..2: inject e_{u_p}; prune at eps_p/sqrt(c)^(p-1);
+push; mask u_{p-1}" — positions beyond l contribute nothing.  The compacted
+schedule runs exactly that per-column recurrence with a per-column position
+(and hence a per-column prune threshold), so each walk's estimate is
+identical to its column in ``probe_walks_telescoped`` up to float summation
+order (tested to 1e-5).
+
+Randomness contract: query q's walks depend only on (keys[q], us[q]).  With
+explicit per-query ``keys``, a batched call is therefore equivalent to Q
+single-query calls — the property the serving engine's batched ``drain()``
+relies on (and the tests assert).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.params import ProbeSimParams
+from repro.core.probe import push_level_padded
+from repro.core.walks import sample_walks_batch
+from repro.graph.structs import EllGraph, Graph
+
+Array = jax.Array
+
+
+@partial(
+    jax.jit,
+    static_argnames=(
+        "n_r",
+        "lanes_q",
+        "max_len",
+        "sqrt_c",
+        "eps_p",
+        "eps_t",
+        "truncation_shift",
+        "use_kernel",
+        "top_k",
+    ),
+    donate_argnames=("acc",),
+)
+def _fused_serve(
+    keys: Array,  # [Q] typed PRNG keys, one stream per query
+    g: Graph | EllGraph,
+    eg: EllGraph,
+    us: Array,  # int32 [Q]
+    acc: Array,  # f32 [Q, n] donated accumulator (usually zeros)
+    *,
+    n_r: int,
+    lanes_q: int,
+    max_len: int,
+    sqrt_c: float,
+    eps_p: float,
+    eps_t: float,
+    truncation_shift: bool,
+    use_kernel: bool,
+    top_k: int,
+):
+    """One fused serve step: sample pool -> compacted probe -> estimates.
+
+    Returns ``(acc, est, topk_idx, topk_vals)``; the top-k outputs are None
+    when ``top_k == 0``.
+    """
+    n = eg.n
+    q = us.shape[0]
+    wq = lanes_q
+    w = q * wq
+    cols = jnp.arange(w)
+    qid = cols // wq  # owning query of each lane column
+
+    # --- walk pool: every walk for every query, one vmapped dispatch -------
+    pool = sample_walks_batch(
+        keys, eg, us, n_r=n_r, max_len=max_len, sqrt_c=sqrt_c
+    ).reshape(q * n_r, max_len)
+    pool_len = (pool < n).sum(axis=1).astype(jnp.int32)
+
+    # --- compacted probe loop ---------------------------------------------
+    # Per-column state: pos (current walk position; 1/0 = finished/idle),
+    # widx (walk id in the flattened pool), next_q (per-query pool cursor).
+    # `total` accumulates finished columns; per-query reduction happens once
+    # at the end (columns are query-sticky, so lane-block sums separate).
+    max_steps = n_r * max_len + max_len + 8  # safety net; loop exits early
+
+    def cond(state):
+        step, pos, widx, next_q, scores, total = state
+        return (step < max_steps) & (
+            jnp.any(pos >= 1) | jnp.any(next_q < n_r)
+        )
+
+    def body(state):
+        step, pos, widx, next_q, scores, total = state
+        # 1) deposit finished columns (idle columns hold zeros anyway)
+        fin = pos == 1
+        total = total + jnp.where(fin[None, :], scores, 0.0)
+        scores = jnp.where(fin[None, :], 0.0, scores)
+        pos = jnp.where(fin, 0, pos)
+        # 2) refill idle columns from their query's pool partition, in pool
+        #    order (selection is content-independent => estimator unbiased)
+        idle = (pos == 0).astype(jnp.int32).reshape(q, wq)
+        rank = (jnp.cumsum(idle, axis=1) - idle).reshape(w)
+        take = (pos == 0) & (rank < (n_r - next_q)[qid])
+        new_widx = qid * n_r + jnp.minimum(next_q[qid] + rank, n_r - 1)
+        widx = jnp.where(take, new_widx, widx)
+        pos = jnp.where(take, pool_len[new_widx], pos)
+        next_q = next_q + take.astype(jnp.int32).reshape(q, wq).sum(axis=1)
+        # 3) one telescoped level per active column, at its own position
+        active = pos >= 2
+        u_p = jnp.where(active, pool[widx, jnp.maximum(pos - 1, 0)], n)
+        scores = scores.at[u_p, cols].add(1.0)  # sentinel -> dump row
+        if eps_p > 0.0:
+            # pruning rule 2 with a per-column level: eps_p / sqrt(c)^(pos-1)
+            thr = eps_p * jnp.power(
+                jnp.float32(sqrt_c), (1 - pos).astype(jnp.float32)
+            )
+            scores = jnp.where(scores > thr[None, :], scores, 0.0)
+        scores = push_level_padded(g, scores, sqrt_c, use_kernel=use_kernel)
+        u_prev = jnp.where(active, pool[widx, jnp.maximum(pos - 2, 0)], n)
+        scores = scores.at[u_prev, cols].set(0.0)  # exclusion mask
+        pos = jnp.where(active, pos - 1, pos)
+        return step + 1, pos, widx, next_q, scores, total
+
+    state = (
+        jnp.int32(0),
+        jnp.zeros(w, jnp.int32),  # pos: all idle -> first iteration refills
+        jnp.zeros(w, jnp.int32),  # widx
+        jnp.zeros(q, jnp.int32),  # next_q
+        jnp.zeros((n + 1, w), jnp.float32),  # scores (baked dump row)
+        jnp.zeros((n + 1, w), jnp.float32),  # total (baked dump row)
+    )
+    step, pos, _, _, scores, total = jax.lax.while_loop(cond, body, state)
+    # safety-net flush (no-op unless max_steps was hit)
+    total = total + jnp.where((pos == 1)[None, :], scores, 0.0)
+
+    # --- per-query segment reduction + epilogue ---------------------------
+    acc = acc + total[:n].reshape(n, q, wq).sum(axis=2).T
+    est = acc / n_r
+    if truncation_shift:
+        est = jnp.where(est > 0, est + eps_t / 2, est)
+    est = est.at[jnp.arange(q), us].set(1.0)
+    if top_k > 0:
+        masked = est.at[jnp.arange(q), us].set(-jnp.inf)
+        vals, idx = jax.lax.top_k(masked, top_k)
+        return acc, est, idx, vals
+    return acc, est, None, None
+
+
+def _query_keys(key: Array | None, keys: Array | None, q: int) -> Array:
+    if keys is not None:
+        return keys
+    if key is None:
+        raise ValueError("multi_source needs `key` or per-query `keys`")
+    return jax.random.split(key, q)
+
+
+def multi_source(
+    key: Array | None,
+    g: Graph | EllGraph,
+    eg: EllGraph,
+    us: Array,
+    params: ProbeSimParams,
+    *,
+    lanes: int = 256,
+    use_kernel: bool = False,
+    n_r: int | None = None,
+    keys: Array | None = None,
+) -> Array:
+    """Fused multi-query single-source SimRank: estimates [Q, n].
+
+    ``us`` is int32 [Q]; ``g`` is the push representation (COO or ELL), ``eg``
+    the ELL table used for walk sampling.  ``lanes`` is the total lane-column
+    width shared by the batch (each query owns ``lanes // Q`` columns).
+    ``n_r`` overrides ``params.n_r`` (anytime/budgeted serving).  Pass
+    per-query ``keys`` ([Q] typed key array) for batch-vs-serial determinism;
+    otherwise ``key`` is split into Q streams.
+    """
+    us = jnp.asarray(us, jnp.int32)
+    q = int(us.shape[0])
+    n_walks = int(n_r or params.n_r)
+    acc = jnp.zeros((q, g.n), jnp.float32)
+    _, est, _, _ = _fused_serve(
+        _query_keys(key, keys, q), g, eg, us, acc,
+        n_r=n_walks,
+        lanes_q=max(1, lanes // q),
+        max_len=params.max_len,
+        sqrt_c=params.sqrt_c,
+        eps_p=params.eps_p,
+        eps_t=params.eps_t,
+        truncation_shift=params.truncation_shift,
+        use_kernel=use_kernel,
+        top_k=0,
+    )
+    return est
+
+
+def multi_source_topk(
+    key: Array | None,
+    g: Graph | EllGraph,
+    eg: EllGraph,
+    us: Array,
+    k: int,
+    params: ProbeSimParams,
+    *,
+    lanes: int = 256,
+    use_kernel: bool = False,
+    n_r: int | None = None,
+    keys: Array | None = None,
+) -> tuple[Array, Array]:
+    """Fused batched top-k (paper Def. 2): (nodes [Q, k], estimates [Q, k]).
+
+    The query node itself is excluded; ``top_k`` runs inside the same
+    compiled step as sampling and the probe.
+    """
+    us = jnp.asarray(us, jnp.int32)
+    q = int(us.shape[0])
+    n_walks = int(n_r or params.n_r)
+    acc = jnp.zeros((q, g.n), jnp.float32)
+    _, _, idx, vals = _fused_serve(
+        _query_keys(key, keys, q), g, eg, us, acc,
+        n_r=n_walks,
+        lanes_q=max(1, lanes // q),
+        max_len=params.max_len,
+        sqrt_c=params.sqrt_c,
+        eps_p=params.eps_p,
+        eps_t=params.eps_t,
+        truncation_shift=params.truncation_shift,
+        use_kernel=use_kernel,
+        top_k=int(k),
+    )
+    return idx, vals

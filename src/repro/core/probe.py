@@ -33,7 +33,13 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.graph.structs import EllGraph, Graph, push_coo, push_ell
+from repro.graph.structs import (
+    EllGraph,
+    Graph,
+    push_coo,
+    push_ell,
+    push_ell_padded,
+)
 
 Array = jax.Array
 
@@ -59,6 +65,40 @@ def push_level(
             return spmm_ops.spmm_ell(g.in_nbrs, scores, w)
         return push_ell(g, scores, weights=w)
     return push_coo(g, scores, weights=w)
+
+
+def push_level_padded(
+    g: Graph | EllGraph,
+    scores: Array,
+    sqrt_c: float,
+    *,
+    use_kernel: bool = False,
+) -> Array:
+    """One push level on an [n + 1, B] score buffer with a baked dump row.
+
+    Row n is the sentinel dump row: scatter writes addressed by sentinel walk
+    positions land there between pushes, so callers never mask or clip their
+    scatter indices.  This function zeroes the dump row (one [B] row write)
+    before the gather — making sentinel neighbor slots read an exact zero —
+    and returns a fresh [n + 1, B] buffer with a zero dump row.  The ELL /
+    Pallas path therefore consumes the buffer directly instead of re-padding
+    ``scores`` on every push (DESIGN.md §2–3).
+    """
+    n = g.n
+    w = g.inv_in_deg * sqrt_c
+    scores = scores.at[n].set(0.0)
+    if isinstance(g, EllGraph):
+        if use_kernel:
+            from repro.kernels.spmm_ell import ops as spmm_ops
+
+            out = spmm_ops.spmm_ell_padded(g.in_nbrs, scores, w)
+        else:
+            out = push_ell_padded(g, scores, weights=w)
+    else:
+        out = push_coo(g, scores[:n], weights=w)
+    return jnp.concatenate(
+        [out, jnp.zeros((1,) + out.shape[1:], out.dtype)], axis=0
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -137,35 +177,32 @@ def probe_walks_telescoped(
     if max_len is not None:
         L = max_len
     cols = jnp.arange(B)
-    scores = jnp.zeros((n, B), dtype=jnp.float32)
+    # [n + 1, B]: the sentinel dump row is baked in at allocation, so dead
+    # walks (position id == n) scatter into row n instead of needing a
+    # clip + validity-mask chain, and the push consumes the buffer directly.
+    scores = jnp.zeros((n + 1, B), dtype=jnp.float32)
 
     def level(p, scores):
         # p runs L .. 2 (1-indexed walk positions)
         u_p = walks[:, p - 1]  # node at position p (sentinel n if dead)
-        u_prev = walks[:, p - 2]  # mask node at position p-1 (always live if p>=2... guarded anyway)
-        valid = u_p < n
-        # inject e_{u_p}
-        scores = scores.at[u_p.clip(0, n - 1), cols].add(
-            valid.astype(scores.dtype)
-        )
+        u_prev = walks[:, p - 2]  # mask node at position p-1
+        # inject e_{u_p}; sentinel positions land in the dump row
+        scores = scores.at[u_p, cols].add(1.0)
         # pruning rule 2: entries at position p face p-1 more pushes
         if eps_p > 0.0:
             thresh = eps_p / (sqrt_c ** (p - 1))
             scores = jnp.where(scores > thresh, scores, 0.0)
-        # push
-        scores = push_level(g, scores, sqrt_c, use_kernel=use_kernel)
-        # exclusion mask at position p-1
-        prev_ok = u_prev < n
-        scores = scores.at[u_prev.clip(0, n - 1), cols].set(
-            jnp.where(prev_ok, 0.0, scores[u_prev.clip(0, n - 1), cols])
-        )
+        # push (masks the dump row, returns it zeroed)
+        scores = push_level_padded(g, scores, sqrt_c, use_kernel=use_kernel)
+        # exclusion mask at position p-1; sentinel writes land in the dump row
+        scores = scores.at[u_prev, cols].set(0.0)
         return scores
 
     # unrolled python loop over a static L keeps each level's eps_p threshold
     # a compile-time constant (XLA fuses the mask chain); L is small (<= ~16).
     for p in range(L, 1, -1):
         scores = level(p, scores)
-    return scores
+    return scores[:n]
 
 
 @partial(jax.jit, static_argnames=("sqrt_c", "eps_p", "use_kernel"))

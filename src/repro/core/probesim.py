@@ -3,7 +3,10 @@
 Variants (all estimate the same unbiased quantity; tested for agreement):
 
 * ``reference``   — literal Alg. 1/2, python loops (oracle; small inputs).
-* ``telescoped``  — batched O(l) telescoped probe per walk chunk (default).
+* ``telescoped``  — the fused serve path (default): the Q = 1 specialization
+                    of ``core.multisource.multi_source`` — pooled walk
+                    sampling, compacted telescoped probe and the epilogue all
+                    in one compiled step (DESIGN.md §3).
 * ``tree``        — Alg. 3 prefix-tree batching + telescoping (fastest when
                     n_r is large relative to the distinct-prefix count).
 * ``randomized``  — Alg. 4 Bernoulli probes, O(n) per level.
@@ -21,6 +24,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.core.multisource import multi_source
 from repro.core.params import ProbeSimParams, make_params
 from repro.core.probe import (
     estimate_walk_reference,
@@ -73,29 +77,22 @@ def single_source(
                 g, walks[k], sqrt_c, eps_p=params.eps_p
             )
     elif variant == "telescoped":
-        for ci, b in enumerate(_walk_chunks(params.n_r, walk_chunk)):
-            ck = jax.random.fold_in(key, ci)
-            walks = sample_walks(
-                ck, eg, u, n_r=walk_chunk, max_len=params.max_len, sqrt_c=sqrt_c
-            )
-            if b < walk_chunk:  # deactivate surplus walks in the last chunk
-                walks = walks.at[b:, :].set(n)
-            cols = probe_walks_telescoped(
-                g,
-                walks,
-                sqrt_c=sqrt_c,
-                eps_p=params.eps_p,
-                use_kernel=use_kernel,
-            )
-            total = total + cols.sum(axis=1)
+        # Q = 1 specialization of the fused multi-query serve path: one
+        # compiled step samples the whole walk pool, runs the compacted
+        # telescoped probe and finalizes the estimate (DESIGN.md §3).
+        return multi_source(
+            key, g, eg, jnp.asarray([u], jnp.int32), params,
+            lanes=walk_chunk, use_kernel=use_kernel,
+        )[0]
     elif variant in ("tree", "auto"):
         for ci, b in enumerate(_walk_chunks(params.n_r, walk_chunk)):
             ck = jax.random.fold_in(key, ci)
+            # the final partial chunk samples exactly b walks (the seed
+            # sampled a full walk_chunk and masked the surplus with a
+            # sentinel fill — wasted sampling work)
             walks = sample_walks(
-                ck, eg, u, n_r=walk_chunk, max_len=params.max_len, sqrt_c=sqrt_c
+                ck, eg, u, n_r=b, max_len=params.max_len, sqrt_c=sqrt_c
             )
-            if b < walk_chunk:
-                walks = walks.at[b:, :].set(n)
             tree = build_prefix_tree(np.asarray(walks), n)
             if not tree.nodes:  # every walk terminated at u immediately
                 continue

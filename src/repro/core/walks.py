@@ -7,6 +7,15 @@ in-neighbors).  We generate a batch of walks as a dense int32 matrix
 termination.  Walks are truncated at ``max_len`` = l_t (Pruning rule 1).
 
 Sampling uses the ELL in-neighbor table: next = in_nbrs[v, floor(r * deg(v))].
+
+Two entry points:
+
+* ``sample_walks``       — n_r walks from a single source (one PRNG stream).
+* ``sample_walks_batch`` — Q independent per-query streams, one vmapped
+  dispatch.  This is the fused-serving path (DESIGN.md §3): the whole walk
+  pool for a query batch is drawn in ONE call, because per-chunk sampling
+  pays a large fixed cost per dispatch (the ELL table walk) that a pooled
+  call amortizes to noise.
 """
 from __future__ import annotations
 
@@ -20,8 +29,7 @@ from repro.graph.structs import EllGraph
 Array = jax.Array
 
 
-@partial(jax.jit, static_argnames=("n_r", "max_len", "sqrt_c"))
-def sample_walks(
+def _sample_walks_impl(
     key: Array,
     eg: EllGraph,
     u: Array,
@@ -30,10 +38,7 @@ def sample_walks(
     max_len: int,
     sqrt_c: float,
 ) -> Array:
-    """Sample ``n_r`` sqrt(c)-walks from node ``u``.
-
-    Returns int32 [n_r, max_len]; walks[:, 0] == u; sentinel = n.
-    """
+    """Trace-level body shared by the single- and multi-query entry points."""
     n = eg.n
     k_cont, k_step = jax.random.split(key)
     # continue/stop coin per (walk, step): continue w.p. sqrt(c)
@@ -57,6 +62,50 @@ def sample_walks(
     )
     walks = jnp.concatenate([u_col[:, None], cols.T], axis=1)
     return walks.astype(jnp.int32)
+
+
+@partial(jax.jit, static_argnames=("n_r", "max_len", "sqrt_c"))
+def sample_walks(
+    key: Array,
+    eg: EllGraph,
+    u: Array,
+    *,
+    n_r: int,
+    max_len: int,
+    sqrt_c: float,
+) -> Array:
+    """Sample ``n_r`` sqrt(c)-walks from node ``u``.
+
+    Returns int32 [n_r, max_len]; walks[:, 0] == u; sentinel = n.
+    """
+    return _sample_walks_impl(
+        key, eg, u, n_r=n_r, max_len=max_len, sqrt_c=sqrt_c
+    )
+
+
+@partial(jax.jit, static_argnames=("n_r", "max_len", "sqrt_c"))
+def sample_walks_batch(
+    keys: Array,
+    eg: EllGraph,
+    us: Array,
+    *,
+    n_r: int,
+    max_len: int,
+    sqrt_c: float,
+) -> Array:
+    """Sample ``n_r`` walks from each of Q sources, one per-query PRNG stream.
+
+    ``keys`` is a [Q] typed key array; ``us`` is int32 [Q].  Returns int32
+    [Q, n_r, max_len].  Query q's walks depend only on (keys[q], us[q]), so a
+    batched serve produces bit-identical walks to Q separate single-query
+    calls with the same per-query keys (exercised by the engine tests).
+    """
+    us = jnp.asarray(us, jnp.int32)
+    return jax.vmap(
+        lambda k, u: _sample_walks_impl(
+            k, eg, u, n_r=n_r, max_len=max_len, sqrt_c=sqrt_c
+        )
+    )(keys, us)
 
 
 def walk_lengths(walks: Array, n: int) -> Array:

@@ -10,7 +10,10 @@ static under jit:
   This is the *gather* representation: propagation becomes a dense gather +
   masked reduce (no scatter), which is the TPU-preferred layout and the one
   our Pallas SpMM kernel consumes.  Also used for O(1) uniform in-neighbor
-  sampling in sqrt(c)-walk generation.
+  sampling in sqrt(c)-walk generation.  The sentinel id ``n`` doubles as the
+  row index of the *dump row* in [n + 1, B] score buffers: serving-path
+  buffers bake that extra zero row in at construction so sentinel gathers
+  and scatters need no per-push masking or re-padding (``push_ell_padded``).
 * ``CsrGraph`` — classic indptr/indices (host-built), used by the host-side
   neighbor sampler and IO.
 
@@ -218,7 +221,22 @@ def push_ell(
     padded = jnp.concatenate(
         [scores, jnp.zeros((1,) + scores.shape[1:], scores.dtype)], axis=0
     )
-    gathered = padded[eg.in_nbrs]  # [n, k_max, ...]
+    return push_ell_padded(eg, padded, weights)
+
+
+def push_ell_padded(
+    eg: EllGraph,
+    scores: Array,
+    weights: Array | None = None,
+) -> Array:
+    """``push_ell`` over a score buffer with the sentinel dump row baked in.
+
+    ``scores`` is [n + 1, ...] and row n (the dump row) MUST be zero: the ELL
+    sentinel id ``n`` then gathers an exact zero, so no per-push re-pad of the
+    score matrix is needed (DESIGN.md §2/§3 — buffers are allocated once with
+    the dump row and carried through all push levels).  Returns [n, ...].
+    """
+    gathered = scores[eg.in_nbrs]  # [n, k_max, ...]
     out = gathered.sum(axis=1)
     if weights is not None:
         out = out * weights.reshape((eg.n,) + (1,) * (out.ndim - 1))

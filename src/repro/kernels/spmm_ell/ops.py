@@ -1,10 +1,18 @@
-"""Public op: ELL SpMM with kernel/oracle dispatch."""
+"""Public op: ELL SpMM with kernel/oracle dispatch.
+
+Two entry points:
+
+* ``spmm_ell``        — classic [n, B] scores; pads the sentinel dump row on
+  every call (kept for the GNN layers and ad-hoc callers).
+* ``spmm_ell_padded`` — serving hot path: scores arrive as [n + 1, B] with
+  the zero dump row already baked in at buffer construction, so the kernel
+  consumes them directly and no per-push re-pad/copy happens (DESIGN.md §3).
+"""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.spmm_ell.ref import spmm_ell_ref
 from repro.kernels.spmm_ell.spmm_ell import spmm_ell_pallas
 
 Array = jax.Array
@@ -14,24 +22,41 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
+def spmm_ell_padded(
+    nbrs: Array,
+    scores: Array,
+    weights: Array,
+    *,
+    block_rows: int = 128,
+) -> Array:
+    """out[v] = w[v] * sum_k scores[nbrs[v,k]]; scores [n + 1, B].
+
+    Row n of ``scores`` is the sentinel dump row and MUST be zero — sentinel
+    neighbor slots (id >= n) gather from it.  Dispatches to the Pallas kernel
+    when the shapes tile (TPU target; interpret-mode on CPU), falling back to
+    a direct-gather oracle otherwise.  Returns [n, B] (callers re-append the
+    dump row once per level, not once per operand).
+    """
+    n = weights.shape[0]
+    if n % block_rows != 0 or scores.shape[1] % 8 != 0:
+        gathered = scores[nbrs.clip(0, n)]  # [n, K, B]
+        return gathered.sum(axis=1) * weights[:, None]
+    return spmm_ell_pallas(
+        nbrs, scores, weights, block_rows=block_rows, interpret=not _on_tpu()
+    )
+
+
 def spmm_ell(nbrs: Array, scores: Array, weights: Array,
              *, block_rows: int = 128) -> Array:
     """out[v] = w[v] * sum_k scores[nbrs[v,k]]; scores [n, B] (no dump row).
 
-    Dispatches to the Pallas kernel when the shapes tile (TPU target;
-    interpret-mode on CPU), falling back to the jnp oracle otherwise.
+    Appends the sentinel dump row and defers to ``spmm_ell_padded``.
     """
-    n = weights.shape[0]
     squeeze = scores.ndim == 1
     if squeeze:
         scores = scores[:, None]
-    if n % block_rows != 0 or scores.shape[1] % 8 != 0:
-        out = spmm_ell_ref(nbrs, scores, weights)
-        return out[:, 0] if squeeze else out
     padded = jnp.concatenate(
         [scores, jnp.zeros((1,) + scores.shape[1:], scores.dtype)], axis=0
     )
-    out = spmm_ell_pallas(
-        nbrs, padded, weights, block_rows=block_rows, interpret=not _on_tpu()
-    )
+    out = spmm_ell_padded(nbrs, padded, weights, block_rows=block_rows)
     return out[:, 0] if squeeze else out

@@ -11,7 +11,11 @@ TPU mapping (DESIGN.md §2 hardware adaptation):
 * the score matrix stays in ANY/HBM space and is gathered row-by-row with
   ``pl.load`` dynamic slices — SpMM is gather-bound by nature, and the VMEM
   budget is BN x B accumulator + one gathered row;
-* K (neighbor slots) is an unrolled static loop.
+* K (neighbor slots) is an unrolled static loop;
+* the kernel consumes scores WITH the sentinel dump row ([n + 1, B], row n
+  zero).  The serving path bakes that row into its score buffers at
+  construction (``ops.spmm_ell_padded``), so sentinel neighbor ids gather a
+  true zero and no per-push re-pad of the operand is issued.
 """
 from __future__ import annotations
 

@@ -3,31 +3,48 @@
 Index-free means the engine holds only the (dynamic) graph; queries run
 against whatever the graph is *now*:
 
-* dynamic batching: queries are queued and dispatched in fixed-size batches
-  (padding with repeats) so the jit'd serve step sees static shapes;
+* dynamic batching: queued queries are dispatched in fixed-size batches of
+  ``batch_q`` (padding with repeats) through the fused multi-query serve
+  step (``core.multisource``), so jit compiles ONE shape per batch size and
+  every push level is shared by the whole batch across the lane dimension;
 * interleaved updates: edge insert/delete ops are applied between batches —
   O(1) buffer writes (graph/dynamic.py), never an index rebuild;
-* incremental refinement: each serve step covers ``walk_chunk`` walks per
-  query; the engine folds chunks until the eps_a budget's n_r is reached,
-  and can return early results (anytime property of Monte-Carlo estimators);
+* anytime serving: ``budget_walks`` caps the walk pool per query (Thm 1
+  still bounds the error at the reduced n_r);
 * straggler mitigation: serving.straggler wraps step dispatch with a
   deadline + retry-on-replica policy (queries are pure functions: idempotent
   re-execution is safe).
+
+Randomness: every submitted query is assigned its own PRNG stream (derived
+from the engine seed and the submission sequence number) at submit time, so
+batched ``drain()`` results are identical to serving the same queries one at
+a time — batch composition never changes a query's answer.
+
+Batched usage::
+
+    eng = SimRankEngine(g, eg, top_k=10, batch_q=8)
+    for u in query_nodes:
+        eng.submit(u)
+    for res in eng.drain(budget_walks=512):   # fused: 8 queries per dispatch
+        print(res.node, res.topk_nodes)
+
+The multi-pod variant swaps the local fused step for
+``core.distributed.make_serve_step`` (same loop structure); see
+launch/serve.py.
 """
 from __future__ import annotations
 
 import time
 from collections import deque
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import numpy as np
 
 import jax
 import jax.numpy as jnp
 
+from repro.core.multisource import multi_source_topk
 from repro.core.params import ProbeSimParams, make_params
-from repro.core.probe import probe_walks_telescoped
-from repro.core.walks import sample_walks
 from repro.graph.dynamic import (
     delete_edges,
     delete_edges_ell,
@@ -57,9 +74,10 @@ class EngineStats:
 class SimRankEngine:
     """Single-host engine over the in-memory dynamic graph.
 
-    The multi-pod variant swaps the local probe for
-    ``core.distributed.make_serve_step`` (same loop structure); see
-    launch/serve.py.
+    ``walk_chunk`` is the total lane-column width of the fused serve step
+    (shared by the whole batch); ``batch_q`` is the fixed query batch size
+    used by ``drain()`` — short batches are padded with repeats so the
+    compiled step is cached per shape.
     """
 
     def __init__(
@@ -73,6 +91,7 @@ class SimRankEngine:
         walk_chunk: int = 256,
         top_k: int = 50,
         seed: int = 0,
+        batch_q: int = 8,
     ):
         self.g = g
         self.eg = eg
@@ -81,9 +100,11 @@ class SimRankEngine:
         )
         self.walk_chunk = walk_chunk
         self.top_k = top_k
+        self.batch_q = batch_q
         self.key = jax.random.key(seed)
-        self.queue: deque[int] = deque()
+        self.queue: deque[tuple[int, jax.Array]] = deque()
         self.stats = EngineStats()
+        self._seq = 0  # submission counter -> per-query PRNG stream
 
     # -- updates ------------------------------------------------------------
 
@@ -103,51 +124,62 @@ class SimRankEngine:
 
     # -- queries ------------------------------------------------------------
 
-    def submit(self, node: int) -> None:
-        self.queue.append(int(node))
+    def _query_key(self) -> jax.Array:
+        k = jax.random.fold_in(self.key, self._seq)
+        self._seq += 1
+        return k
 
-    def _single_source(self, u: int, *, budget_walks: int | None = None):
-        p = self.params
-        n_r = budget_walks or p.n_r
-        total = jnp.zeros(self.g.n, jnp.float32)
-        done = 0
-        ci = 0
-        while done < n_r:
-            self.key, sub = jax.random.split(self.key)
-            walks = sample_walks(
-                sub, self.eg, u, n_r=self.walk_chunk, max_len=p.max_len,
-                sqrt_c=p.sqrt_c,
+    def submit(self, node: int) -> None:
+        self.queue.append((int(node), self._query_key()))
+
+    def _serve_batch(
+        self,
+        batch: list[tuple[int, jax.Array]],
+        budget_walks: int | None,
+    ) -> list[QueryResult]:
+        """One fused dispatch for a (possibly repeat-padded) query batch."""
+        n_r = budget_walks or self.params.n_r
+        us = jnp.asarray([u for u, _ in batch], jnp.int32)
+        keys = jnp.stack([k for _, k in batch])
+        t0 = time.time()
+        idx, vals = multi_source_topk(
+            None, self.g, self.eg, us, self.top_k, self.params,
+            lanes=self.walk_chunk, n_r=n_r, keys=keys,
+        )
+        idx = np.asarray(idx)  # device sync
+        vals = np.asarray(vals)
+        dt = time.time() - t0
+        self.stats.steps += 1
+        return [
+            QueryResult(
+                node=u,
+                topk_nodes=idx[i],
+                topk_scores=vals[i],
+                walks_used=n_r,
+                latency_s=dt,
             )
-            live = min(self.walk_chunk, n_r - done)
-            if live < self.walk_chunk:
-                walks = walks.at[live:, :].set(self.g.n)
-            cols = probe_walks_telescoped(
-                self.g, walks, sqrt_c=p.sqrt_c, eps_p=p.eps_p
-            )
-            total = total + cols.sum(axis=1)
-            done += live
-            ci += 1
-            self.stats.steps += 1
-        est = total / n_r
-        est = est.at[u].set(-jnp.inf)
-        return est
+            for i, (u, _) in enumerate(batch)
+        ]
 
     def run_query(self, u: int, *, budget_walks: int | None = None) -> QueryResult:
-        t0 = time.time()
-        est = self._single_source(u, budget_walks=budget_walks)
-        vals, idx = jax.lax.top_k(est, self.top_k)
+        """Serve one query now (Q = 1 fused step), bypassing the queue."""
+        res = self._serve_batch([(int(u), self._query_key())], budget_walks)[0]
         self.stats.queries += 1
-        return QueryResult(
-            node=u,
-            topk_nodes=np.asarray(idx),
-            topk_scores=np.asarray(vals),
-            walks_used=budget_walks or self.params.n_r,
-            latency_s=time.time() - t0,
-        )
+        return res
 
     def drain(self, *, budget_walks: int | None = None) -> list[QueryResult]:
-        out = []
+        """Serve every queued query in fused batches of ``batch_q``.
+
+        Short final batches are padded by repeating the last entry (the
+        padded slots recompute an already-served query and are discarded),
+        so every dispatch reuses the same compiled step.
+        """
+        out: list[QueryResult] = []
         while self.queue:
-            out.append(self.run_query(self.queue.popleft(),
-                                       budget_walks=budget_walks))
+            live = min(self.batch_q, len(self.queue))
+            batch = [self.queue.popleft() for _ in range(live)]
+            while len(batch) < self.batch_q:
+                batch.append(batch[-1])  # pad with repeats: static shape
+            out.extend(self._serve_batch(batch, budget_walks)[:live])
+            self.stats.queries += live
         return out

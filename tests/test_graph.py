@@ -4,8 +4,7 @@ import tempfile
 
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from hypothesis_compat import given, settings, st
 
 import jax
 import jax.numpy as jnp

@@ -1,0 +1,193 @@
+"""Fused multi-query serve path (core/multisource.py + serving engine).
+
+Covers the tentpole contracts:
+* the compacted fused probe equals the host-accumulated telescoped oracle,
+  including partial pools (n_r not divisible by the lane width);
+* ``multi_source(us=[u])`` IS ``single_source(u, variant='telescoped')``;
+* batched results are identical to per-query results given per-query keys
+  (the engine's batched ``drain()`` == serial serving property);
+* COO push, ELL push and the Pallas kernel path agree.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    make_params,
+    multi_source,
+    multi_source_topk,
+    single_source,
+    simrank_power,
+)
+from repro.core.probe import probe_walks_telescoped
+from repro.core.walks import sample_walks_batch
+from repro.graph import ell_from_edges, graph_from_edges, powerlaw_graph
+
+
+def _oracle(g, pool_q, u, params, n_r):
+    """Host-accumulated telescoped estimate for one query's walk pool."""
+    cols = probe_walks_telescoped(
+        g, pool_q, sqrt_c=params.sqrt_c, eps_p=params.eps_p
+    )
+    ref = cols.sum(axis=1) / n_r
+    if params.truncation_shift:
+        ref = jnp.where(ref > 0, ref + params.eps_t / 2, ref)
+    return ref.at[u].set(1.0)
+
+
+@pytest.mark.parametrize("n_r,lanes", [(96, 32), (77, 32), (5, 64)])
+def test_fused_equals_telescoped_oracle(toy, key, n_r, lanes):
+    """Fused compacted probe == per-walk telescoped sums, for full and
+    partial pools (n_r % lanes != 0 and n_r < lanes)."""
+    g, eg, n = toy["g"], toy["eg"], toy["n"]
+    params = make_params(n, c=0.25, eps_a=0.1, delta=0.01, n_r_override=n_r)
+    us = jnp.array([0, 3], jnp.int32)
+    keys = jax.random.split(key, 2)
+    est = multi_source(None, g, eg, us, params, lanes=lanes, keys=keys)
+    pool = sample_walks_batch(
+        keys, eg, us, n_r=n_r, max_len=params.max_len, sqrt_c=params.sqrt_c
+    )
+    for qi in range(2):
+        ref = _oracle(g, pool[qi], int(us[qi]), params, n_r)
+        np.testing.assert_allclose(
+            np.asarray(est[qi]), np.asarray(ref), atol=2e-5
+        )
+
+
+def test_single_source_is_q1_specialization(toy, key):
+    params = make_params(toy["n"], c=0.25, eps_a=0.1, n_r_override=200)
+    s = single_source(
+        key, toy["g"], toy["eg"], 0, params, variant="telescoped", walk_chunk=32
+    )
+    m = multi_source(
+        key, toy["g"], toy["eg"], jnp.array([0]), params, lanes=32
+    )[0]
+    np.testing.assert_allclose(np.asarray(s), np.asarray(m), atol=1e-5)
+    assert float(s[0]) == 1.0
+
+
+def test_batch_matches_per_query(small_powerlaw, key):
+    """Q = 4 batch == 4 single-query calls with the same per-query keys."""
+    g, eg = small_powerlaw["g"], small_powerlaw["eg"]
+    params = make_params(small_powerlaw["n"], c=0.6, eps_a=0.2,
+                         n_r_override=150)
+    in_deg = np.asarray(g.in_deg)
+    us = np.argsort(-in_deg)[:4].astype(np.int32)
+    keys = jax.random.split(key, 4)
+    batch = multi_source(None, g, eg, us, params, lanes=64, keys=keys)
+    for i in range(4):
+        solo = multi_source(
+            None, g, eg, us[i : i + 1], params, lanes=64, keys=keys[i : i + 1]
+        )
+        np.testing.assert_allclose(
+            np.asarray(batch[i]), np.asarray(solo[0]), atol=1e-5
+        )
+
+
+def test_fused_error_bound_toy(toy, key):
+    """The fused path stays within the Thm 2 bound on the paper's graph."""
+    truth = np.asarray(simrank_power(toy["g"], c=0.25, iters=60))[0]
+    params = make_params(toy["n"], c=0.25, eps_a=0.1, delta=0.01)
+    est = np.asarray(
+        multi_source(key, toy["g"], toy["eg"], jnp.array([0]), params,
+                     lanes=256)
+    )[0]
+    err = np.abs(est - truth)
+    err[0] = 0
+    assert err.max() <= params.eps_a, f"maxerr {err.max()}"
+
+
+def test_push_representations_agree(key):
+    """COO push, ELL push and the Pallas spmm_ell kernel give one answer."""
+    src, dst, n = powerlaw_graph(128, 600, seed=1)  # n tiles by block_rows
+    g = graph_from_edges(src, dst, n)
+    eg = ell_from_edges(src, dst, n)
+    params = make_params(n, c=0.6, eps_a=0.2, n_r_override=128)
+    u = int(np.argmax(np.bincount(dst, minlength=n)))
+    us = jnp.array([u], jnp.int32)
+    coo = multi_source(key, g, eg, us, params, lanes=32)
+    ell = multi_source(key, eg, eg, us, params, lanes=32)
+    kern = multi_source(key, eg, eg, us, params, lanes=32, use_kernel=True)
+    np.testing.assert_allclose(np.asarray(coo), np.asarray(ell), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(ell), np.asarray(kern), atol=1e-5)
+
+
+def test_multi_source_topk_excludes_self(toy, key):
+    params = make_params(toy["n"], c=0.25, eps_a=0.1, n_r_override=300)
+    us = jnp.array([0, 2], jnp.int32)
+    idx, vals = multi_source_topk(key, toy["g"], toy["eg"], us, 3, params)
+    assert idx.shape == (2, 3) and vals.shape == (2, 3)
+    for qi in range(2):
+        assert int(us[qi]) not in np.asarray(idx[qi])
+        assert (np.diff(np.asarray(vals[qi])) <= 1e-7).all()  # sorted
+
+
+def test_tree_variant_partial_chunk(toy, key):
+    """Host chunk loops sample exactly the remaining walks in the final
+    partial chunk (no surplus sampling + masking) and stay accurate."""
+    truth = np.asarray(simrank_power(toy["g"], c=0.25, iters=60))[0]
+    params = make_params(toy["n"], c=0.25, eps_a=0.1, delta=0.01,
+                         n_r_override=1000)  # 1000 = 3 * 384 + 232: partial
+    est = np.asarray(
+        single_source(key, toy["g"], toy["eg"], 0, params, variant="tree",
+                      walk_chunk=384)
+    )
+    err = np.abs(est - truth)
+    err[0] = 0
+    assert err.max() <= params.eps_a + 0.05  # statistical headroom at n_r=1e3
+
+
+def test_engine_drain_batched_matches_serial():
+    """drain() in fused batches == the same queries served one at a time.
+
+    Queries carry their PRNG stream from submit time, so batch composition
+    (including repeat padding of the final short batch) cannot change any
+    answer."""
+    from repro.serving.engine import SimRankEngine
+
+    src, dst, n = powerlaw_graph(300, 2500, seed=0)
+    in_deg = np.bincount(dst, minlength=n)
+    g = graph_from_edges(src, dst, n, capacity=len(src) + 64)
+    eg = ell_from_edges(src, dst, n, k_max=int(in_deg.max()) + 8)
+    qs = np.argsort(-in_deg)[:5].astype(int)  # 5 queries, batch_q=4: padding
+
+    eng_a = SimRankEngine(g, eg, eps_a=0.2, top_k=5, walk_chunk=128,
+                          batch_q=4, seed=7)
+    for u in qs:
+        eng_a.submit(int(u))
+    batched = eng_a.drain(budget_walks=96)
+
+    eng_b = SimRankEngine(g, eg, eps_a=0.2, top_k=5, walk_chunk=128,
+                          batch_q=1, seed=7)
+    for u in qs:
+        eng_b.submit(int(u))
+    serial = eng_b.drain(budget_walks=96)
+
+    assert [r.node for r in batched] == list(qs)
+    for rb, rs in zip(batched, serial):
+        assert rb.node == rs.node
+        np.testing.assert_allclose(rb.topk_scores, rs.topk_scores, atol=1e-5)
+        assert set(rb.topk_nodes) == set(rs.topk_nodes)
+    assert eng_a.stats.queries == 5
+    assert eng_a.stats.steps == 2  # ceil(5 / 4) fused dispatches
+
+
+def test_engine_run_query_and_updates():
+    """run_query + interleaved updates on the fused engine (seed semantics)."""
+    from repro.serving.engine import SimRankEngine
+
+    src, dst, n = powerlaw_graph(300, 2500, seed=0)
+    in_deg = np.bincount(dst, minlength=n)
+    g = graph_from_edges(src, dst, n, capacity=len(src) + 64)
+    eg = ell_from_edges(src, dst, n, k_max=int(in_deg.max()) + 8)
+    eng = SimRankEngine(g, eg, eps_a=0.2, top_k=5, walk_chunk=128)
+    u = int(np.argmax(in_deg))
+    res = eng.run_query(u, budget_walks=256)
+    assert len(res.topk_nodes) == 5
+    assert u not in res.topk_nodes
+    eng.insert(np.array([1, 2], np.int32), np.array([u, u], np.int32))
+    res2 = eng.run_query(u, budget_walks=256)
+    assert len(res2.topk_nodes) == 5
+    assert eng.stats.updates == 2 and eng.stats.queries == 2

@@ -3,8 +3,7 @@ bounds (Thm 1/2) and pruning behaviour — including hypothesis property tests
 over random graphs."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from hypothesis_compat import given, settings, st
 
 import jax
 import jax.numpy as jnp

@@ -2,8 +2,7 @@
 tensor products and spherical harmonics (the NequIP substrate)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.models.gnn.so3 import cg_real, real_sh, tp_paths
 
