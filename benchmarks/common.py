@@ -32,8 +32,9 @@ def write_json(path: str, *, quick: bool, suites: list[str]) -> None:
         results=dict(RESULTS),
         rows=rows,
     )
-    if "serve" in RESULTS:  # promoted: the acceptance artifact consumers read
-        payload["serve"] = RESULTS["serve"]
+    for key in ("serve", "dynamic"):  # promoted: acceptance artifacts
+        if key in RESULTS:
+            payload[key] = RESULTS[key]
     with open(path, "w") as f:
         json.dump(payload, f, indent=2)
     print(f"# wrote {path}", flush=True)

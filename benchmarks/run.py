@@ -1,10 +1,12 @@
 """Benchmark harness entry: one module per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit) and
-writes a machine-readable ``BENCH_serve.json`` (serving queries/sec for the
-serial vs fused-batched drain, plus every emitted row — e.g. the kernel
-timings).  ``--full`` runs paper-scale sweeps; default (``--quick``) is the
-CPU-quick profile.
+writes machine-readable artifacts: ``BENCH_serve.json`` (serving queries/sec
+for the serial vs fused-batched drain) when the serve suite runs and
+``BENCH_dynamic.json`` (incremental vs rebuild update throughput and
+update->queryable latency) when the dynamic suite runs, each also carrying
+every emitted row.  ``--full`` runs paper-scale sweeps; default (``--quick``)
+is the CPU-quick profile.
 """
 from __future__ import annotations
 
@@ -56,11 +58,15 @@ def main() -> None:
         print(f"# suite: {name}", file=sys.stderr)
         suites[name](quick=quick)
     print(f"# total {time.time() - t0:.1f}s", file=sys.stderr)
-    json_path = args.json
-    if json_path is None and "serve" in chosen:
-        json_path = "BENCH_serve.json"
-    if json_path:
-        write_json(json_path, quick=quick, suites=chosen)
+    if args.json:
+        write_json(args.json, quick=quick, suites=chosen)
+    else:
+        # one artifact per acceptance consumer, written iff its suite ran
+        # (so other suites never clobber an existing artifact)
+        if "serve" in chosen:
+            write_json("BENCH_serve.json", quick=quick, suites=chosen)
+        if "dynamic" in chosen:
+            write_json("BENCH_dynamic.json", quick=quick, suites=chosen)
 
 
 if __name__ == "__main__":

@@ -1,8 +1,10 @@
 """Quickstart: single-source + top-k SimRank with ProbeSim on the paper's
 Figure-1 toy graph, validated against the Power Method (Table 2), plus the
-fused multi-query serve path (many sources, one compiled step).
+fused multi-query serve path (many sources, one compiled step) and a fused
+dynamic update->query epoch.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
+(The README quickstart snippets are excerpts of this file; CI runs both.)
 """
 import numpy as np
 
@@ -17,6 +19,7 @@ from repro.core import (
     topk,
 )
 from repro.graph import TOY_TABLE2, ell_from_edges, graph_from_edges, toy_graph
+from repro.serving.dynamic_engine import DynamicEngine
 from repro.serving.engine import SimRankEngine
 
 
@@ -66,6 +69,27 @@ def main():
         print(f"engine top-3 for '{'abcdefgh'[res.node]}':",
               [("abcdefgh"[i], round(float(s), 4))
                for i, s in zip(res.topk_nodes, res.topk_scores)])
+
+    # --- dynamic epochs: fused update -> query, no index rebuild ----------
+    # one jitted epoch step applies a padded edge-update batch to both
+    # device mirrors and serves the query batch on the just-updated graph;
+    # results carry the graph `version` they were computed against.
+    # capacity/k_max reserve headroom for insertions (overflow is flagged
+    # and auto-regrown, never silently dropped)
+    gd = graph_from_edges(src, dst, n, capacity=len(src) + 8)
+    egd = ell_from_edges(src, dst, n, k_max=8)
+    deng = DynamicEngine(gd, egd, c=0.25, eps_a=0.05, top_k=3,
+                         batch_q=2, update_batch=4, seed=0)
+    deng.insert([5, 5], [0, 1])  # f->a, f->b: new 2-step meeting paths
+    deng.submit(0)
+    deng.submit(2)
+    ep = deng.step()  # update + query in ONE compiled dispatch
+    print(f"epoch: {ep.updates_applied} updates applied -> graph v{ep.version}")
+    for res in ep.results:
+        print(f"dynamic top-3 for '{'abcdefgh'[res.node]}' @v{res.version}:",
+              [("abcdefgh"[i], round(float(s), 4))
+               for i, s in zip(res.topk_nodes, res.topk_scores)])
+    assert all(res.version == 1 for res in ep.results)
 
 
 if __name__ == "__main__":

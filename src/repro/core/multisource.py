@@ -57,22 +57,7 @@ from repro.graph.structs import EllGraph, Graph
 Array = jax.Array
 
 
-@partial(
-    jax.jit,
-    static_argnames=(
-        "n_r",
-        "lanes_q",
-        "max_len",
-        "sqrt_c",
-        "eps_p",
-        "eps_t",
-        "truncation_shift",
-        "use_kernel",
-        "top_k",
-    ),
-    donate_argnames=("acc",),
-)
-def _fused_serve(
+def fused_serve_impl(
     keys: Array,  # [Q] typed PRNG keys, one stream per query
     g: Graph | EllGraph,
     eg: EllGraph,
@@ -175,6 +160,28 @@ def _fused_serve(
         vals, idx = jax.lax.top_k(masked, top_k)
         return acc, est, idx, vals
     return acc, est, None, None
+
+
+# The standalone jitted entry point.  ``fused_serve_impl`` stays un-jitted so
+# larger fused steps can trace it inline — the dynamic epoch step
+# (serving/dynamic_engine.py) composes `apply_update_batch -> fused_serve_impl`
+# inside ONE jit, which a nested jitted call with donated operands would
+# complicate for no benefit.
+_fused_serve = partial(
+    jax.jit,
+    static_argnames=(
+        "n_r",
+        "lanes_q",
+        "max_len",
+        "sqrt_c",
+        "eps_p",
+        "eps_t",
+        "truncation_shift",
+        "use_kernel",
+        "top_k",
+    ),
+    donate_argnames=("acc",),
+)(fused_serve_impl)
 
 
 def _query_keys(key: Array | None, keys: Array | None, q: int) -> Array:

@@ -22,6 +22,8 @@ last real node); arrays that may be indexed by sentinel carry one extra row.
 """
 from __future__ import annotations
 
+import dataclasses
+
 import numpy as np
 
 import jax
@@ -32,9 +34,27 @@ from repro.utils.pytree import static, struct
 Array = jax.Array
 
 
+def _snapshot_field():
+    """Traced kw-only field for the dynamic-graph snapshot metadata.
+
+    ``version`` / ``overflow`` default to ``None`` (legacy construction sites
+    keep working; ``None`` is an empty pytree subtree) and are set to concrete
+    scalars by the constructors below so ``graph/dynamic.py`` can thread them
+    through jitted update/epoch steps.
+    """
+    return dataclasses.field(default=None, kw_only=True)
+
+
 @struct
 class Graph:
-    """COO graph, capacity padded.  Padding edges have src = dst = n."""
+    """COO graph, capacity padded.  Padding edges have src = dst = n.
+
+    ``version`` is a monotonically increasing int32 scalar bumped once per
+    applied update batch (graph/dynamic.py) so query results can be
+    attributed to a graph snapshot; ``overflow`` is a sticky bool scalar set
+    when an insert was skipped for lack of capacity (COO buffer or the ELL
+    mirror's row) — callers detect it and run the host-side ``regrow`` path.
+    """
 
     src: Array  # int32 [capacity]
     dst: Array  # int32 [capacity]
@@ -43,6 +63,8 @@ class Graph:
     num_edges: Array  # int32 scalar (actual edges)
     n: int = static()
     capacity: int = static()
+    version: Array | None = _snapshot_field()  # int32 scalar
+    overflow: Array | None = _snapshot_field()  # bool scalar
 
     @property
     def inv_in_deg(self) -> Array:
@@ -64,6 +86,8 @@ class EllGraph:
     in_deg: Array  # int32 [n]
     n: int = static()
     k_max: int = static()
+    version: Array | None = _snapshot_field()  # int32 scalar
+    overflow: Array | None = _snapshot_field()  # bool scalar
 
     @property
     def inv_in_deg(self) -> Array:
@@ -125,6 +149,8 @@ def graph_from_edges(
         num_edges=jnp.asarray(m, dtype=jnp.int32),
         n=int(n),
         capacity=int(capacity),
+        version=jnp.asarray(0, dtype=jnp.int32),
+        overflow=jnp.asarray(False),
     )
 
 
@@ -159,6 +185,8 @@ def ell_from_edges(
         in_deg=jnp.asarray(in_deg),
         n=int(n),
         k_max=int(k_max),
+        version=jnp.asarray(0, dtype=jnp.int32),
+        overflow=jnp.asarray(False),
     )
 
 

@@ -7,8 +7,13 @@ against whatever the graph is *now*:
   ``batch_q`` (padding with repeats) through the fused multi-query serve
   step (``core.multisource``), so jit compiles ONE shape per batch size and
   every push level is shared by the whole batch across the lane dimension;
-* interleaved updates: edge insert/delete ops are applied between batches —
-  O(1) buffer writes (graph/dynamic.py), never an index rebuild;
+* interleaved updates: edge insert/delete ops are applied between batches
+  through the coordinated both-mirrors path (graph/dynamic.py) — O(1)
+  buffer writes, never an index rebuild; skipped-for-capacity inserts are
+  surfaced via ``overflow`` (see serving/dynamic_engine.py for the engine
+  that fuses updates INTO the serve step and auto-regrows);
+* versioned snapshots: every result carries the graph ``version`` it was
+  computed against;
 * anytime serving: ``budget_walks`` caps the walk pool per query (Thm 1
   still bounds the error at the reduced n_r);
 * straggler mitigation: serving.straggler wraps step dispatch with a
@@ -45,12 +50,7 @@ import jax.numpy as jnp
 
 from repro.core.multisource import multi_source_topk
 from repro.core.params import ProbeSimParams, make_params
-from repro.graph.dynamic import (
-    delete_edges,
-    delete_edges_ell,
-    insert_edges,
-    insert_edges_ell,
-)
+from repro.graph.dynamic import apply_update_batch_jit, make_update_batch
 from repro.graph.structs import EllGraph, Graph
 
 
@@ -61,6 +61,7 @@ class QueryResult:
     topk_scores: np.ndarray
     walks_used: int
     latency_s: float
+    version: int = -1  # graph snapshot the scores are attributed to
 
 
 @dataclass
@@ -108,19 +109,57 @@ class SimRankEngine:
 
     # -- updates ------------------------------------------------------------
 
-    def insert(self, src: np.ndarray, dst: np.ndarray) -> None:
-        src = jnp.asarray(src, jnp.int32)
-        dst = jnp.asarray(dst, jnp.int32)
-        self.g = insert_edges(self.g, src, dst)
-        self.eg = insert_edges_ell(self.eg, src, dst)
+    @property
+    def version(self) -> int:
+        """Current graph snapshot id (bumped once per applied update batch)."""
+        return int(self.eg.version) if self.eg.version is not None else -1
+
+    @property
+    def overflow(self) -> bool:
+        """True iff an insert was ever skipped for lack of capacity.
+
+        Sticky until the caller regrows (``graph.dynamic.regrow``); the
+        ``DynamicEngine`` automates that — this engine only surfaces it.
+        """
+        return bool(self.g.overflow) if self.g.overflow is not None else False
+
+    def _apply(self, src, dst, insert: bool) -> None:
+        if src.shape[0] == 0:
+            return
+        # pad to the next power of two so variable-size update bursts reuse
+        # a log-bounded set of compiled batch shapes
+        bucket = 1 << (int(src.shape[0]) - 1).bit_length()
+        batch = make_update_batch(
+            src, dst, insert, batch_size=bucket, n=self.g.n
+        )
+        self.g, self.eg, _ = apply_update_batch_jit(self.g, self.eg, batch)
         self.stats.updates += int(src.shape[0])
 
+    def insert(self, src: np.ndarray, dst: np.ndarray) -> None:
+        """Insert edges into BOTH mirrors atomically (skip-on-overflow)."""
+        self._apply(np.asarray(src, np.int32).reshape(-1),
+                    np.asarray(dst, np.int32).reshape(-1), True)
+
     def delete(self, src: np.ndarray, dst: np.ndarray) -> None:
-        src = jnp.asarray(src, jnp.int32)
-        dst = jnp.asarray(dst, jnp.int32)
-        self.g = delete_edges(self.g, src, dst)
-        self.eg = delete_edges_ell(self.eg, src, dst)
-        self.stats.updates += int(src.shape[0])
+        """Delete edges from BOTH mirrors atomically (absent edges: no-op).
+
+        ``apply_update_batch`` removes at most one copy of a (s, d) pair per
+        batch, so duplicate pairs in one call (multigraph copies) are split
+        into sequential unique-pair sub-batches — one copy removed per op,
+        matching the pre-batch sequential semantics.
+        """
+        src = np.asarray(src, np.int32).reshape(-1)
+        dst = np.asarray(dst, np.int32).reshape(-1)
+        if src.shape[0] == 0:
+            return
+        seen: dict[tuple[int, int], int] = {}
+        occ = np.empty(src.shape[0], np.int64)
+        for i, (s, d) in enumerate(zip(src.tolist(), dst.tolist())):
+            occ[i] = seen.get((s, d), 0)
+            seen[(s, d)] = occ[i] + 1
+        for k in range(int(occ.max()) + 1):
+            m = occ == k
+            self._apply(src[m], dst[m], False)
 
     # -- queries ------------------------------------------------------------
 
@@ -150,6 +189,7 @@ class SimRankEngine:
         vals = np.asarray(vals)
         dt = time.time() - t0
         self.stats.steps += 1
+        ver = self.version
         return [
             QueryResult(
                 node=u,
@@ -157,6 +197,7 @@ class SimRankEngine:
                 topk_scores=vals[i],
                 walks_used=n_r,
                 latency_s=dt,
+                version=ver,
             )
             for i, (u, _) in enumerate(batch)
         ]

@@ -1,0 +1,454 @@
+"""Dynamic-graph subsystem: masked batches, mirror consistency, overflow,
+regrow, versioning, and the fused update->query epoch step (DESIGN.md §5)."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import make_params, multi_source, simrank_power
+from repro.graph import (
+    apply_update_batch_jit,
+    delete_edges,
+    delete_edges_ell,
+    ell_from_edges,
+    erdos_renyi_graph,
+    graph_from_edges,
+    graph_to_host_edges,
+    insert_edges,
+    insert_edges_ell,
+    make_update_batch,
+    regrow,
+)
+from repro.serving.dynamic_engine import DynamicEngine
+
+
+def _mirrors_equal_rebuild(g, eg):
+    """Assert COO and ELL mirrors are consistent with each other AND
+    bit-identical to a from-scratch rebuild of the live edge list."""
+    n = g.n
+    src, dst = graph_to_host_edges(g)
+    g_rb = graph_from_edges(src, dst, n, capacity=g.capacity)
+    eg_rb = ell_from_edges(src, dst, n, k_max=eg.k_max)
+    np.testing.assert_array_equal(np.asarray(g.src), np.asarray(g_rb.src))
+    np.testing.assert_array_equal(np.asarray(g.dst), np.asarray(g_rb.dst))
+    np.testing.assert_array_equal(np.asarray(g.in_deg), np.asarray(g_rb.in_deg))
+    np.testing.assert_array_equal(np.asarray(g.out_deg), np.asarray(g_rb.out_deg))
+    np.testing.assert_array_equal(
+        np.asarray(eg.in_nbrs), np.asarray(eg_rb.in_nbrs)
+    )
+    np.testing.assert_array_equal(np.asarray(eg.in_deg), np.asarray(eg_rb.in_deg))
+
+
+@pytest.fixture()
+def small():
+    src, dst, n = erdos_renyi_graph(60, 300, seed=5)
+    return dict(
+        src=src, dst=dst, n=n,
+        g=graph_from_edges(src, dst, n, capacity=len(src) + 64),
+        eg=ell_from_edges(src, dst, n, k_max=int(np.bincount(dst, minlength=n).max()) + 8),
+    )
+
+
+# ---------------------------------------------------------------------------
+# apply_update_batch: mirrors, masking, versioning
+# ---------------------------------------------------------------------------
+
+
+def test_masked_noop_batch_is_identity(small):
+    g, eg, n = small["g"], small["eg"], small["n"]
+    batch = make_update_batch([], [], True, batch_size=16, n=n)
+    g2, eg2, applied = apply_update_batch_jit(g, eg, batch)
+    assert not bool(applied.any())
+    assert int(g2.version) == int(g.version)  # no applied op -> no bump
+    np.testing.assert_array_equal(np.asarray(g2.src), np.asarray(g.src))
+    np.testing.assert_array_equal(np.asarray(g2.dst), np.asarray(g.dst))
+    np.testing.assert_array_equal(np.asarray(eg2.in_nbrs), np.asarray(eg.in_nbrs))
+    np.testing.assert_array_equal(np.asarray(eg2.in_deg), np.asarray(eg.in_deg))
+    assert int(g2.num_edges) == int(g.num_edges)
+
+
+def test_version_increments_once_per_applied_batch(small):
+    g, eg, n = small["g"], small["eg"], small["n"]
+    rng = np.random.default_rng(0)
+    for i in range(3):  # 3 batches of 8 ops each -> version advances by 3
+        s = rng.integers(0, n, 8).astype(np.int32)
+        d = rng.integers(0, n, 8).astype(np.int32)
+        batch = make_update_batch(s, d, True, batch_size=16, n=n)
+        g, eg, applied = apply_update_batch_jit(g, eg, batch)
+        assert bool(applied.any())
+        assert int(g.version) == i + 1
+        assert int(eg.version) == i + 1
+
+
+def test_insert_delete_roundtrip_mirrors_equal_rebuild(small):
+    g, eg, n = small["g"], small["eg"], small["n"]
+    rng = np.random.default_rng(1)
+    new_s = rng.integers(0, n, 10).astype(np.int32)
+    new_d = rng.integers(0, n, 10).astype(np.int32)
+    b_ins = make_update_batch(new_s, new_d, True, batch_size=16, n=n)
+    g2, eg2, ap = apply_update_batch_jit(g, eg, b_ins)
+    assert bool(ap[:10].all())
+    _mirrors_equal_rebuild(g2, eg2)
+    # delete a mix of original and just-inserted edges
+    del_s = np.concatenate([small["src"][:5], new_s[:5]])
+    del_d = np.concatenate([small["dst"][:5], new_d[:5]])
+    b_del = make_update_batch(del_s, del_d, False, batch_size=16, n=n)
+    g3, eg3, ap2 = apply_update_batch_jit(g2, eg2, b_del)
+    assert bool(ap2[:10].all())
+    assert int(g3.num_edges) == int(g.num_edges)
+    _mirrors_equal_rebuild(g3, eg3)
+    # degrees consistent between mirrors after the round trip
+    np.testing.assert_array_equal(np.asarray(g3.in_deg), np.asarray(eg3.in_deg))
+
+
+def test_mixed_batch_applies_in_phases(small):
+    """Deletes apply before inserts within one batch (documented order)."""
+    g, eg, n = small["g"], small["eg"], small["n"]
+    s0, d0 = int(small["src"][0]), int(small["dst"][0])
+    # delete an existing edge and insert a fresh one in the same batch
+    batch = make_update_batch(
+        [s0, (s0 + 1) % n], [d0, (d0 + 1) % n], [False, True],
+        batch_size=8, n=n,
+    )
+    assert batch.has_deletes
+    g2, eg2, applied = apply_update_batch_jit(g, eg, batch)
+    assert bool(applied[0]) and bool(applied[1])
+    assert int(g2.num_edges) == int(g.num_edges)
+    _mirrors_equal_rebuild(g2, eg2)
+
+
+def test_duplicate_delete_applies_once(small):
+    g, eg, n = small["g"], small["eg"], small["n"]
+    s0, d0 = int(small["src"][0]), int(small["dst"][0])
+    batch = make_update_batch([s0, s0], [d0, d0], False, batch_size=4, n=n)
+    g2, eg2, applied = apply_update_batch_jit(g, eg, batch)
+    assert list(np.asarray(applied)) == [True, False, False, False]
+    assert int(g2.num_edges) == int(g.num_edges) - 1
+    np.testing.assert_array_equal(np.asarray(g2.in_deg), np.asarray(eg2.in_deg))
+
+
+# ---------------------------------------------------------------------------
+# Overflow: explicit signal, consistent skip, regrow recovery
+# ---------------------------------------------------------------------------
+
+
+def test_insert_overflow_flag_and_consistent_skip():
+    src = np.array([0, 1, 2], np.int32)
+    dst = np.array([1, 2, 0], np.int32)
+    n = 6
+    g = graph_from_edges(src, dst, n, capacity=4)  # room for ONE more edge
+    eg = ell_from_edges(src, dst, n, k_max=2)
+    batch = make_update_batch([3, 4, 5], [0, 1, 2], True, batch_size=4, n=n)
+    g2, eg2, applied = apply_update_batch_jit(g, eg, batch)
+    assert bool(g2.overflow) and bool(eg2.overflow)  # detectable by callers
+    assert int(applied.sum()) == 1  # only the edge that fit
+    _mirrors_equal_rebuild(g2, eg2)  # the skip hit BOTH mirrors
+    # overflow is sticky across a non-overflowing batch
+    g3, eg3, _ = apply_update_batch_jit(
+        g2, eg2, make_update_batch([], [], True, batch_size=4, n=n)
+    )
+    assert bool(g3.overflow)
+
+
+def test_ell_row_overflow_flag():
+    # COO has room but dst 0's ELL row is full -> skipped + flagged in both
+    src = np.array([1, 2], np.int32)
+    dst = np.array([0, 0], np.int32)
+    n = 5
+    g = graph_from_edges(src, dst, n, capacity=10)
+    eg = ell_from_edges(src, dst, n, k_max=2)
+    batch = make_update_batch([3], [0], True, batch_size=4, n=n)
+    g2, eg2, applied = apply_update_batch_jit(g, eg, batch)
+    assert bool(g2.overflow) and bool(eg2.overflow)
+    assert not bool(applied.any())
+    assert int(g2.num_edges) == 2 and int(eg2.in_deg[0]) == 2
+
+
+def test_vectorized_fast_paths_overflow_and_masking(small):
+    g, eg, n = small["g"], small["eg"], small["n"]
+    sentinel = jnp.asarray([n], jnp.int32)
+    # sentinel-only batch: identity, no version bump
+    g2 = insert_edges(g, sentinel, sentinel)
+    assert int(g2.version) == int(g.version)
+    assert int(g2.num_edges) == int(g.num_edges)
+    eg2 = insert_edges_ell(eg, sentinel, sentinel)
+    assert int(eg2.version) == int(eg.version)
+    g3 = delete_edges(g, sentinel, sentinel)
+    assert int(g3.num_edges) == int(g.num_edges)
+    eg3 = delete_edges_ell(eg, sentinel, sentinel)
+    np.testing.assert_array_equal(np.asarray(eg3.in_deg), np.asarray(eg.in_deg))
+    # COO overflow via the standalone path is flagged, not silently dropped
+    free = g.capacity - int(g.num_edges)
+    rng = np.random.default_rng(2)
+    s = rng.integers(0, n, free + 3).astype(np.int32)
+    d = rng.integers(0, n, free + 3).astype(np.int32)
+    g4 = insert_edges(g, jnp.asarray(s), jnp.asarray(d))
+    assert bool(g4.overflow)
+    assert int(g4.num_edges) == g.capacity
+
+
+def test_regrow_clears_overflow_preserves_edges_and_version():
+    src = np.array([0, 1, 2], np.int32)
+    dst = np.array([1, 2, 0], np.int32)
+    n = 6
+    g = graph_from_edges(src, dst, n, capacity=4)
+    eg = ell_from_edges(src, dst, n, k_max=2)
+    batch = make_update_batch([3, 4], [0, 1], True, batch_size=4, n=n)
+    g2, eg2, _ = apply_update_batch_jit(g, eg, batch)
+    assert bool(g2.overflow)
+    g3, eg3 = regrow(g2, eg2)
+    assert not bool(g3.overflow) and not bool(eg3.overflow)
+    assert g3.capacity > g2.capacity and eg3.k_max > eg2.k_max
+    assert int(g3.version) == int(g2.version)  # representation change only
+    assert int(g3.num_edges) == int(g2.num_edges)
+    _mirrors_equal_rebuild(g3, eg3)
+    # the previously-skipped insert now fits
+    g4, eg4, applied = apply_update_batch_jit(
+        g3, eg3, make_update_batch([4], [1], True, batch_size=4, n=n)
+    )
+    assert bool(applied[0]) and not bool(g4.overflow)
+
+
+# ---------------------------------------------------------------------------
+# The fused epoch step (DynamicEngine)
+# ---------------------------------------------------------------------------
+
+
+def test_epoch_scores_equal_rebuild(small, key):
+    """Epoch-step scores on the incrementally-updated graph are EXACTLY the
+    fused multi-source scores on a from-scratch rebuild (same PRNG keys):
+    stable compaction + append keep the mirrors bit-identical to a rebuild,
+    so the sampled walks are identical too."""
+    g, eg, n = small["g"], small["eg"], small["n"]
+    rng = np.random.default_rng(3)
+    # insert pairs disjoint from the deleted pairs, else the engine cuts the
+    # batch at the insert->delete conflict (separately tested) and this
+    # epoch would intentionally apply only a prefix of the stream
+    del_pairs = set(zip(small["src"][:4].tolist(), small["dst"][:4].tolist()))
+    pairs = []
+    while len(pairs) < 12:
+        s_, d_ = int(rng.integers(0, n)), int(rng.integers(0, n))
+        if (s_, d_) not in del_pairs:
+            pairs.append((s_, d_))
+    new_s = np.array([p[0] for p in pairs], np.int32)
+    new_d = np.array([p[1] for p in pairs], np.int32)
+    seed = 11
+    eng = DynamicEngine(
+        g, eg, c=0.4, eps_a=0.2, top_k=5, batch_q=4, update_batch=16,
+        seed=seed,
+    )
+    eng.insert(new_s, new_d)
+    eng.delete(small["src"][:4], small["dst"][:4])
+    queries = [1, 2, 3, 4]
+    for u in queries:
+        eng.submit(u)
+    ep = eng.step(budget_walks=64)
+    assert ep.version == 1 and len(ep.results) == 4
+
+    # from-scratch rebuild of the same logical graph, same per-query streams
+    src2 = np.concatenate([small["src"][4:], new_s])
+    dst2 = np.concatenate([small["dst"][4:], new_d])
+    g_rb = graph_from_edges(src2, dst2, n, capacity=g.capacity)
+    eg_rb = ell_from_edges(src2, dst2, n, k_max=eg.k_max)
+    _mirrors_equal_rebuild(eng.g, eng.eg)
+    keys = jnp.stack(
+        [jax.random.fold_in(jax.random.key(seed), i) for i in range(4)]
+    )
+    params = make_params(n, c=0.4, eps_a=0.2, delta=0.01)
+    est = np.asarray(
+        multi_source(None, g_rb, eg_rb, jnp.asarray(queries, jnp.int32),
+                     params, lanes=256, n_r=64, keys=keys)
+    )
+    for i, res in enumerate(ep.results):
+        expect = est[i].copy()
+        expect[queries[i]] = -np.inf  # top-k excludes the query node
+        order = np.argsort(-expect, kind="stable")[:5]
+        np.testing.assert_allclose(
+            res.topk_scores, expect[order], atol=1e-5
+        )
+
+
+def test_epoch_accuracy_against_power_method(toy, key):
+    """Index-free freshness: after updates, epoch scores still satisfy the
+    paper's error bound w.r.t. ground truth on the UPDATED graph."""
+    n = toy["n"]
+    g = graph_from_edges(toy["src"], toy["dst"], n, capacity=len(toy["src"]) + 8)
+    eg = ell_from_edges(toy["src"], toy["dst"], n, k_max=8)
+    eng = DynamicEngine(
+        g, eg, c=0.25, eps_a=0.05, top_k=3, batch_q=2, update_batch=8,
+        seed=0,
+    )
+    eng.insert(np.array([5, 5], np.int32), np.array([0, 1], np.int32))
+    eng.submit(0)
+    eng.submit(2)
+    ep = eng.step()
+    src2 = np.concatenate([toy["src"], [5, 5]]).astype(np.int32)
+    dst2 = np.concatenate([toy["dst"], [0, 1]]).astype(np.int32)
+    g2 = graph_from_edges(src2, dst2, n)
+    truth = np.asarray(simrank_power(g2, c=0.25, iters=60))
+    for res in ep.results:
+        for node, score in zip(res.topk_nodes, res.topk_scores):
+            assert abs(score - truth[res.node, node]) <= 0.05 + 1e-6
+
+
+def test_engine_auto_regrow_retries_skipped_inserts():
+    src = np.array([0, 1, 2], np.int32)
+    dst = np.array([1, 2, 0], np.int32)
+    n = 6
+    g = graph_from_edges(src, dst, n, capacity=4)
+    eg = ell_from_edges(src, dst, n, k_max=2)
+    eng = DynamicEngine(
+        g, eg, c=0.3, eps_a=0.3, top_k=2, batch_q=2, update_batch=8, seed=0
+    )
+    eng.insert([3, 4, 5], [0, 1, 2])
+    eng.submit(0)
+    ep1 = eng.step(budget_walks=16)
+    assert ep1.overflow and ep1.regrown and ep1.updates_requeued == 2
+    assert not eng.overflow  # cleared by regrow
+    ep2 = eng.step(budget_walks=16)  # retried ops apply now
+    assert ep2.updates_applied == 2 and not ep2.overflow
+    assert int(eng.g.num_edges) == 6
+    _mirrors_equal_rebuild(eng.g, eng.eg)
+
+
+def test_engine_no_autoregrow_surfaces_skipped_ops():
+    """auto_regrow=False: skipped inserts are surfaced, not silently lost —
+    the caller regrows manually and re-submits them."""
+    src = np.array([0, 1, 2], np.int32)
+    dst = np.array([1, 2, 0], np.int32)
+    n = 6
+    g = graph_from_edges(src, dst, n, capacity=4)
+    eg = ell_from_edges(src, dst, n, k_max=2)
+    eng = DynamicEngine(
+        g, eg, c=0.3, eps_a=0.3, top_k=2, batch_q=2, update_batch=8,
+        seed=0, auto_regrow=False,
+    )
+    eng.insert([3, 4, 5], [0, 1, 2])
+    eng.submit(0)
+    ep = eng.step(budget_walks=16)
+    assert ep.overflow and not ep.regrown and ep.updates_requeued == 0
+    assert sorted(ep.skipped_ops) == [(4, 1, True), (5, 2, True)]
+    assert eng.overflow  # sticky until the caller regrows
+    eng.g, eng.eg = regrow(eng.g, eng.eg)
+    for s, d, _ in ep.skipped_ops:
+        eng.insert([s], [d])
+    ep2 = eng.step(budget_walks=16)
+    assert ep2.updates_applied == 2 and int(eng.g.num_edges) == 6
+    _mirrors_equal_rebuild(eng.g, eng.eg)
+
+
+def test_engine_owns_graph_state(small):
+    """epoch_step donates the engine's graph buffers; the caller's arrays
+    must stay valid because the engine copies at construction."""
+    g, eg, n = small["g"], small["eg"], small["n"]
+    src_before = np.asarray(g.src).copy()
+    eng = DynamicEngine(
+        g, eg, c=0.3, eps_a=0.3, top_k=2, batch_q=2, update_batch=4, seed=0
+    )
+    eng.insert([1], [2])
+    eng.submit(1)
+    eng.step(budget_walks=16)
+    # the fixture's graph is untouched and still readable after donation
+    np.testing.assert_array_equal(np.asarray(g.src), src_before)
+    assert int(g.version) == 0
+
+
+def test_engine_batch_cut_preserves_insert_then_delete_order(small):
+    """An insert and delete of the same edge in one submission stream must
+    not land in the same batch (delete phase runs first) — the engine cuts
+    the batch and nets out to 'edge absent', matching stream order."""
+    g, eg, n = small["g"], small["eg"], small["n"]
+    eng = DynamicEngine(
+        g, eg, c=0.3, eps_a=0.3, top_k=2, batch_q=2, update_batch=8, seed=0
+    )
+    fresh = (int(small["src"][0]) + 7) % n, int(small["dst"][0])
+    eng.insert([fresh[0]], [fresh[1]])
+    eng.delete([fresh[0]], [fresh[1]])
+    ep1 = eng.step(budget_walks=16)
+    assert ep1.updates_submitted == 1  # batch cut before the delete
+    ep2 = eng.step(budget_walks=16)
+    assert ep2.updates_submitted == 1 and ep2.updates_applied == 1
+    assert int(eng.g.num_edges) == int(g.num_edges)
+    _mirrors_equal_rebuild(eng.g, eng.eg)
+
+
+def test_engine_rejects_out_of_range_ops(small):
+    """Garbage node ids fail fast at enqueue — downstream they would be
+    sentinel-masked and then mistaken for capacity-overflow skips."""
+    g, eg, n = small["g"], small["eg"], small["n"]
+    eng = DynamicEngine(
+        g, eg, c=0.3, eps_a=0.3, top_k=2, batch_q=2, update_batch=4, seed=0
+    )
+    with pytest.raises(ValueError):
+        eng.insert([n], [0])
+    with pytest.raises(ValueError):
+        eng.delete([0], [-1])
+    assert eng.pending == (0, 0)
+
+
+def test_engine_update_only_epochs(small):
+    """Epochs with no queued queries apply updates without paying the
+    fused probe, and drain() terminates with the right final state."""
+    g, eg, n = small["g"], small["eg"], small["n"]
+    eng = DynamicEngine(
+        g, eg, c=0.3, eps_a=0.3, top_k=2, batch_q=2, update_batch=4, seed=0
+    )
+    rng = np.random.default_rng(4)
+    eng.insert(rng.integers(0, n, 10).astype(np.int32),
+               rng.integers(0, n, 10).astype(np.int32))
+    eps = eng.drain(budget_walks=16)
+    assert len(eps) == 3  # ceil(10 / 4) update-only epochs
+    assert all(ep.results == [] for ep in eps)
+    assert sum(ep.updates_applied for ep in eps) == 10
+    assert eng.version == 3 and eng.pending == (0, 0)
+    _mirrors_equal_rebuild(eng.g, eng.eg)
+
+
+def test_engine_multigraph_duplicate_deletes(small):
+    """Deleting both copies of a doubly-inserted edge removes both: the
+    batcher cuts at a repeated delete pair so each batch removes one copy."""
+    g, eg, n = small["g"], small["eg"], small["n"]
+    base = int(g.num_edges)
+    eng = DynamicEngine(
+        g, eg, c=0.3, eps_a=0.3, top_k=2, batch_q=2, update_batch=8, seed=0
+    )
+    fresh = (int(small["src"][0]) + 9) % n, int(small["dst"][0])
+    eng.insert([fresh[0], fresh[0]], [fresh[1], fresh[1]])
+    eng.step(budget_walks=16)
+    assert int(eng.g.num_edges) == base + 2
+    eng.delete([fresh[0], fresh[0]], [fresh[1], fresh[1]])
+    eng.drain(budget_walks=16)
+    assert int(eng.g.num_edges) == base
+    _mirrors_equal_rebuild(eng.g, eng.eg)
+
+
+def test_simrank_engine_multigraph_duplicate_deletes(small):
+    """SimRankEngine.delete removes one copy per op even for duplicate
+    pairs in a single call (split into unique-pair sub-batches)."""
+    from repro.serving.engine import SimRankEngine
+
+    g, eg, n = small["g"], small["eg"], small["n"]
+    base = int(g.num_edges)
+    eng = SimRankEngine(g, eg, c=0.3, eps_a=0.3, top_k=2, seed=0)
+    fresh = (int(small["src"][0]) + 11) % n, int(small["dst"][0])
+    eng.insert(np.array([fresh[0]] * 2), np.array([fresh[1]] * 2))
+    assert int(eng.g.num_edges) == base + 2
+    eng.delete(np.array([fresh[0]] * 2), np.array([fresh[1]] * 2))
+    assert int(eng.g.num_edges) == base
+    np.testing.assert_array_equal(np.asarray(eng.g.in_deg),
+                                  np.asarray(eng.eg.in_deg))
+
+
+def test_engine_results_stamp_version(small):
+    g, eg, n = small["g"], small["eg"], small["n"]
+    eng = DynamicEngine(
+        g, eg, c=0.3, eps_a=0.3, top_k=2, batch_q=2, update_batch=4, seed=0
+    )
+    eng.submit(1)
+    ep0 = eng.step(budget_walks=16)
+    assert ep0.version == 0 and ep0.results[0].version == 0
+    eng.insert([1], [2])
+    eng.submit(1)
+    ep1 = eng.step(budget_walks=16)
+    assert ep1.version == 1 and ep1.results[0].version == 1

@@ -1,0 +1,43 @@
+"""README quickstart lint: execute every fenced python block in README.md.
+
+Keeps the README honest: the quickstart snippets are excerpts of
+``examples/quickstart.py``, and this check fails CI whenever they drift from
+an API that actually runs (wrong import, renamed kwarg, broken assertion).
+Blocks run top-to-bottom in ONE shared namespace, like a reader pasting
+them into a single session.
+
+Usage:  PYTHONPATH=src python tools/check_readme.py [README.md]
+"""
+from __future__ import annotations
+
+import re
+import sys
+
+
+def extract_python_blocks(text: str) -> list[str]:
+    return re.findall(r"```python\n(.*?)```", text, re.S)
+
+
+def main() -> int:
+    path = sys.argv[1] if len(sys.argv) > 1 else "README.md"
+    with open(path) as f:
+        blocks = extract_python_blocks(f.read())
+    if not blocks:
+        print(f"{path}: no ```python blocks found", file=sys.stderr)
+        return 1
+    ns: dict = {"__name__": "__readme__"}
+    for i, block in enumerate(blocks, 1):
+        print(f"--- {path} python block {i}/{len(blocks)} "
+              f"({len(block.splitlines())} lines)")
+        try:
+            exec(compile(block, f"{path}#block{i}", "exec"), ns)
+        except Exception as e:
+            print(f"FAILED block {i}: {type(e).__name__}: {e}",
+                  file=sys.stderr)
+            return 1
+    print(f"{path}: {len(blocks)} snippet blocks executed OK")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
