@@ -11,16 +11,15 @@ import numpy as np
 import jax
 
 from benchmarks.common import emit, pick_query_nodes, timed
+from repro.api import GraphHandle, QuerySpec, SimRankSession
 from repro.core import (
     build_oneway_index,
-    make_params,
     mc_single_source,
     simrank_power,
     simrank_truncated_single_source,
-    single_source,
     tsf_single_source,
 )
-from repro.graph import ell_from_edges, graph_from_edges, paper_dataset
+from repro.graph import paper_dataset
 
 DATASETS = [("wiki-vote", 0.15), ("hepth", 0.1), ("as", 0.04), ("hepph", 0.03)]
 C = 0.6
@@ -32,28 +31,29 @@ def run(quick: bool = True) -> None:
     for name, scale in datasets:
         jax.clear_caches()  # bound XLA-CPU JIT dylib growth across shape sweeps
         src, dst, n = paper_dataset(name, scale=scale)
-        g = graph_from_edges(src, dst, n)
-        in_deg = np.asarray(g.in_deg)
-        eg = ell_from_edges(src, dst, n, k_max=int(in_deg.max()) + 1)
-        truth = np.asarray(simrank_power(g, c=C, iters=55))
+        in_deg = np.bincount(dst, minlength=n)
+        h = GraphHandle.from_edges(src, dst, n, k_max=int(in_deg.max()) + 1)
+        truth = np.asarray(simrank_power(h.g, c=C, iters=55))
         queries = pick_query_nodes(in_deg, N_QUERIES)
 
         for eps_a in ([0.1, 0.05] if quick else [0.1, 0.05, 0.025, 0.0125]):
-            params = make_params(n, c=C, eps_a=eps_a, delta=0.01)
+            sess = SimRankSession(h, c=C, eps_a=eps_a, delta=0.01,
+                                  own_graph=False)
             errs, ts = [], []
             for u in queries:
-                key = jax.random.key(int(u))
-                est, dt = timed(
-                    single_source, key, g, eg, int(u), params, variant="telescoped"
-                )
-                e = np.abs(np.asarray(est) - truth[u])
+                spec = QuerySpec(kind="single_source", node=int(u),
+                                 key=jax.random.key(int(u)),
+                                 variant="telescoped")
+                env, dt = timed(sess.query, spec)
+                e = np.abs(env.scores - truth[u])
                 e[u] = 0
                 errs.append(e.max())
                 ts.append(dt)
             emit(
                 f"abserr/{name}/probesim_eps{eps_a}",
                 float(np.mean(ts)) * 1e6,
-                f"abserr={np.mean(errs):.4f};bound={eps_a};n_r={params.n_r}",
+                f"abserr={np.mean(errs):.4f};bound={eps_a};"
+                f"n_r={sess.params.n_r}",
             )
 
         # MC baseline (same walk budget class)
@@ -61,7 +61,7 @@ def run(quick: bool = True) -> None:
         errs, ts = [], []
         for u in queries:
             est, dt = timed(
-                mc_single_source, jax.random.key(int(u)), eg, np.int32(u),
+                mc_single_source, jax.random.key(int(u)), h.eg, np.int32(u),
                 r=r, max_len=16, sqrt_c=float(np.sqrt(C)),
             )
             e = np.abs(np.asarray(est) - truth[u]); e[u] = 0
@@ -73,7 +73,7 @@ def run(quick: bool = True) -> None:
         errs, ts = [], []
         for u in queries:
             est, dt = timed(
-                simrank_truncated_single_source, g, int(u), c=C, iters=3
+                simrank_truncated_single_source, h.g, int(u), c=C, iters=3
             )
             e = np.abs(np.asarray(est) - truth[u]); e[u] = 0
             errs.append(e.max()); ts.append(dt)
@@ -82,11 +82,11 @@ def run(quick: bool = True) -> None:
 
         # TSF (R_g scaled down for CPU)
         rg, rq = (50, 5) if quick else (300, 40)
-        idx = build_oneway_index(jax.random.key(1), eg, r_g=rg)
+        idx = build_oneway_index(jax.random.key(1), h.eg, r_g=rg)
         errs, ts = [], []
         for u in queries:
             est, dt = timed(
-                tsf_single_source, jax.random.key(int(u)), idx, eg,
+                tsf_single_source, jax.random.key(int(u)), idx, h.eg,
                 np.int32(u), r_q=rq, t=10, c=C,
             )
             e = np.abs(np.asarray(est) - truth[u]); e[u] = 0

@@ -1,23 +1,23 @@
 """Dynamic-graph serving: incremental maintenance vs rebuild-from-scratch.
 
 The paper's §1 motivation made quantitative.  ProbeSim is index-free, so an
-edge update is an O(1) buffer write into the capacity-padded COO/ELL mirrors
-and the next query is already exact w.r.t. the new graph; index-based
-competitors must rebuild before the first fresh query (TSF: the R_g one-way
-graphs; SLING: the whole index).  Two measurements against a
-rebuild-from-scratch baseline (rebuild both device mirrors from the updated
-host edge list — the cheapest possible "index", i.e. a lower bound on any
-index-based competitor's maintenance cost):
+edge update is an O(1) buffer write into the capacity-padded COO/ELL
+mirrors (owned by one ``GraphHandle``) and the next query is already exact
+w.r.t. the new graph; index-based competitors must rebuild before the
+first fresh query (TSF: the R_g one-way graphs; SLING: the whole index).
+Two measurements against a rebuild-from-scratch baseline (rebuild the
+handle from the updated host edge list — the cheapest possible "index",
+i.e. a lower bound on any index-based competitor's maintenance cost):
 
 * **sustained update throughput** (edges/sec): rounds of fixed-size update
-  batches through the jitted coordinated apply (``apply_update_batch_jit``,
-  both mirrors, on device) vs a host rebuild of both mirrors per batch;
+  batches through the jitted coordinated apply (``GraphHandle.apply_batch``,
+  both mirrors, on device) vs a host rebuild of the handle per batch;
 * **update->queryable latency** (seconds): time from an update batch's
   arrival until the post-update graph state is resident and consistent on
   device, ready for the next fused query dispatch — the freshness gap a
   query observes.  For context we also report the fused epoch latency
-  (update + Q queries in ONE compiled step, ``DynamicEngine.step``) and the
-  rebuild + identical fused query dispatch.
+  (update + Q queries in ONE compiled step, ``SimRankSession.epoch``) and
+  the rebuild + identical fused query dispatch.
 
 Results land in ``benchmarks.common.RESULTS['dynamic']`` and are written to
 ``BENCH_dynamic.json`` by ``run.py`` (CI asserts freshness_speedup > 1).
@@ -32,15 +32,9 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import RESULTS, emit, pick_query_nodes, timed
+from repro.api import GraphHandle, SimRankSession
 from repro.core import build_oneway_index, make_params, multi_source_topk
-from repro.graph import (
-    apply_update_batch_jit,
-    ell_from_edges,
-    erdos_renyi_graph,
-    graph_from_edges,
-    make_update_batch,
-)
-from repro.serving.dynamic_engine import DynamicEngine
+from repro.graph import erdos_renyi_graph, make_update_batch
 
 C = 0.6
 TOP_K = 50
@@ -68,8 +62,7 @@ def run(quick: bool = True) -> None:
     # latency reps, and the epoch section's warmup + reps
     capacity = len(src) + B * (rounds + 2 * reps + 4)
     k_max = int(in_deg.max()) + 128
-    g = graph_from_edges(src, dst, n, capacity=capacity)
-    eg = ell_from_edges(src, dst, n, k_max=k_max)
+    handle = GraphHandle.from_edges(src, dst, n, capacity=capacity, k_max=k_max)
     rng = np.random.default_rng(1)
 
     def fresh_ops(r):
@@ -82,13 +75,14 @@ def run(quick: bool = True) -> None:
         s, d = fresh_ops(r)
         batches.append(make_update_batch(s, d, True, batch_size=B, n=n))
     # compile once, then stream all rounds through the same step
-    gw, ew, _ = apply_update_batch_jit(g, eg, batches[0])
-    jax.block_until_ready((gw.src, ew.in_nbrs))
-    gc, ec = g, eg
+    hw = handle.copy()
+    hw.apply_batch(batches[0])
+    jax.block_until_ready((hw.g.src, hw.eg.in_nbrs))
+    hc = handle.copy()
     t0 = time.time()
     for b in batches:
-        gc, ec, _ = apply_update_batch_jit(gc, ec, b)
-    jax.block_until_ready((gc.src, ec.in_nbrs))
+        hc.apply_batch(b)
+    jax.block_until_ready((hc.g.src, hc.eg.in_nbrs))
     t_inc = time.time() - t0
     inc_eps = B * rounds / t_inc
     emit("dynamic/incremental_update_eps", t_inc / rounds * 1e6,
@@ -101,9 +95,8 @@ def run(quick: bool = True) -> None:
         bd = np.asarray(b.dst)[np.asarray(b.dst) < n]
         hs = np.concatenate([hs, bs])
         hd = np.concatenate([hd, bd])
-        g_rb = graph_from_edges(hs, hd, n, capacity=capacity)
-        eg_rb = ell_from_edges(hs, hd, n, k_max=k_max)
-        jax.block_until_ready((g_rb.src, eg_rb.in_nbrs))
+        h_rb = GraphHandle.from_edges(hs, hd, n, capacity=capacity, k_max=k_max)
+        jax.block_until_ready((h_rb.g.src, h_rb.eg.in_nbrs))
     t_rb = time.time() - t0
     rb_eps = B * rounds / t_rb
     emit("dynamic/rebuild_update_eps", t_rb / rounds * 1e6,
@@ -111,7 +104,7 @@ def run(quick: bool = True) -> None:
 
     # TSF's index maintenance cost after the same updates (the paper's §1
     # critique): one-way-graph rebuild, the cheapest index-based competitor
-    _, t_tsf = timed(build_oneway_index, jax.random.key(0), ec, r_g=50)
+    _, t_tsf = timed(build_oneway_index, jax.random.key(0), hc.eg, r_g=50)
     emit("dynamic/tsf_index_rebuild_rg50", t_tsf * 1e6,
          f"vs_incremental_batch={t_tsf / max(t_inc / rounds, 1e-9):.0f}x")
 
@@ -123,8 +116,8 @@ def run(quick: bool = True) -> None:
         s, d = fresh_ops(rounds + r)
         batch = make_update_batch(s, d, True, batch_size=B, n=n)
         t0 = time.time()
-        gc, ec, _ = apply_update_batch_jit(gc, ec, batch)
-        jax.block_until_ready((gc.src, ec.in_nbrs))
+        hc.apply_batch(batch)
+        jax.block_until_ready((hc.g.src, hc.eg.in_nbrs))
         inc_lat.append(time.time() - t0)
         hs = np.concatenate([hs, s])
         hd = np.concatenate([hd, d])
@@ -138,9 +131,8 @@ def run(quick: bool = True) -> None:
     rb_lat = []
     for r in range(reps):
         t0 = time.time()
-        g_rb = graph_from_edges(hs, hd, n, capacity=capacity)
-        eg_rb = ell_from_edges(hs, hd, n, k_max=k_max)
-        jax.block_until_ready((g_rb.src, eg_rb.in_nbrs))
+        h_rb = GraphHandle.from_edges(hs, hd, n, capacity=capacity, k_max=k_max)
+        jax.block_until_ready((h_rb.g.src, h_rb.eg.in_nbrs))
         rb_lat.append(time.time() - t0)
     rb_queryable = _median(rb_lat)
     freshness_speedup = rb_queryable / inc_queryable
@@ -150,51 +142,44 @@ def run(quick: bool = True) -> None:
     # --- 3. end-to-end context: fused epoch vs rebuild + same query --------
     # both paths consume the IDENTICAL update stream from the identical
     # starting graph (the accumulated hs/hd edge list), so every rep
-    # queries the same edge set: the engine applies batch r to its mirrors,
-    # the baseline rebuilds from the edge list as of batch r
+    # queries the same edge set: the session applies batch r to its owned
+    # mirrors, the baseline rebuilds from the edge list as of batch r
     params = make_params(n, c=C, eps_a=0.1, delta=0.01)
-    qnodes = pick_query_nodes(in_deg, Q, seed=2)
-    g3 = graph_from_edges(hs, hd, n, capacity=capacity)
-    eg3 = ell_from_edges(hs, hd, n, k_max=k_max)
-    eng = DynamicEngine(g3, eg3, c=C, eps_a=0.1, top_k=TOP_K,
-                        batch_q=Q, update_batch=B, seed=0)
+    qnodes = [int(u) for u in pick_query_nodes(in_deg, Q, seed=2)]
+    h3 = GraphHandle.from_edges(hs, hd, n, capacity=capacity, k_max=k_max)
+    sess = SimRankSession(h3, c=C, eps_a=0.1, top_k=TOP_K,
+                          batch_q=Q, update_batch=B, seed=0)
     # warm the compiled epoch step (its batch joins the shared stream)
     s, d = fresh_ops(99)
-    eng.insert(s, d)
-    for u in qnodes:
-        eng.submit(int(u))
-    eng.step(budget_walks=n_r)
+    sess.epoch(inserts=(s, d), queries=qnodes, budget_walks=n_r)
     hs = np.concatenate([hs, s])
     hd = np.concatenate([hd, d])
     epoch_lat = []
     snapshots = []
     for r in range(reps):
         s, d = fresh_ops(100 + r)
-        eng.insert(s, d)
-        for u in qnodes:
-            eng.submit(int(u))
-        ep = eng.step(budget_walks=n_r)
+        ep = sess.epoch(inserts=(s, d), queries=qnodes, budget_walks=n_r)
         epoch_lat.append(ep.latency_s)
         hs = np.concatenate([hs, s])
         hd = np.concatenate([hd, d])
         snapshots.append((hs, hd))  # edge list as of this rep's batch
     epoch_s = _median(epoch_lat)
     emit("dynamic/epoch_update_plus_query", epoch_s * 1e6,
-         f"B={B},Q={Q},n_r={n_r},version={eng.version}")
+         f"B={B},Q={Q},n_r={n_r},version={sess.version}")
 
     keys = jax.random.split(jax.random.key(3), Q)
     us = jnp.asarray(qnodes, jnp.int32)
-    g_rb = graph_from_edges(*snapshots[0], n, capacity=capacity)
-    eg_rb = ell_from_edges(*snapshots[0], n, k_max=k_max)
-    idx, vals = multi_source_topk(None, g_rb, eg_rb, us, TOP_K, params,
+    h_rb = GraphHandle.from_edges(*snapshots[0], n, capacity=capacity,
+                                  k_max=k_max)
+    idx, vals = multi_source_topk(None, h_rb.g, h_rb.eg, us, TOP_K, params,
                                   lanes=256, n_r=n_r, keys=keys)
     jax.block_until_ready(idx)  # warm the query step
     rb_e2e = []
     for hs_r, hd_r in snapshots:
         t0 = time.time()
-        g_rb = graph_from_edges(hs_r, hd_r, n, capacity=capacity)
-        eg_rb = ell_from_edges(hs_r, hd_r, n, k_max=k_max)
-        idx, vals = multi_source_topk(None, g_rb, eg_rb, us, TOP_K, params,
+        h_rb = GraphHandle.from_edges(hs_r, hd_r, n, capacity=capacity,
+                                      k_max=k_max)
+        idx, vals = multi_source_topk(None, h_rb.g, h_rb.eg, us, TOP_K, params,
                                       lanes=256, n_r=n_r, keys=keys)
         jax.block_until_ready((idx, vals))
         rb_e2e.append(time.time() - t0)
@@ -213,6 +198,7 @@ def run(quick: bool = True) -> None:
         epoch_update_plus_query_s=epoch_s,
         rebuild_plus_query_s=rb_e2e_s,
         tsf_index_rebuild_s=t_tsf,
+        session_stats=sess.stats.as_dict(),
     )
 
 

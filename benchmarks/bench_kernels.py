@@ -8,8 +8,9 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import emit, timed
+from repro.api import GraphHandle
 from repro.core import estimate_walk_reference, probe_walks_telescoped, sample_walks
-from repro.graph import ell_from_edges, graph_from_edges, powerlaw_graph
+from repro.graph import powerlaw_graph
 from repro.kernels.spmm_ell.ref import spmm_ell_ref
 
 
@@ -26,19 +27,18 @@ def run(quick: bool = True) -> None:
 
     # algorithmic win: telescoped O(l) vs per-prefix O(l^2) pushes
     src, dst, gn = powerlaw_graph(2000, 16_000, seed=1)
-    g = graph_from_edges(src, dst, gn)
-    eg = ell_from_edges(src, dst, gn)
+    h = GraphHandle.from_edges(src, dst, gn)
     u = int(dst[0])
-    walks = sample_walks(jax.random.key(0), eg, u, n_r=32, max_len=10,
+    walks = sample_walks(jax.random.key(0), h.eg, u, n_r=32, max_len=10,
                          sqrt_c=0.775)
     _, t_tel = timed(
-        probe_walks_telescoped, g, walks, sqrt_c=0.775, reps=3
+        probe_walks_telescoped, h.g, walks, sqrt_c=0.775, reps=3
     )
 
     def per_prefix_all():
         outs = []
         for k in range(8):  # subset: reference is the slow oracle
-            outs.append(estimate_walk_reference(g, walks[k], 0.775))
+            outs.append(estimate_walk_reference(h.g, walks[k], 0.775))
         return outs
 
     _, t_ref_probe = timed(per_prefix_all)

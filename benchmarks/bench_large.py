@@ -10,15 +10,14 @@ import numpy as np
 import jax
 
 from benchmarks.common import emit, pick_query_nodes, timed
+from repro.api import GraphHandle, QuerySpec, SimRankSession
 from repro.core import (
     build_oneway_index,
     evaluate_with_pool,
-    make_params,
     simrank_truncated_single_source,
-    single_source,
     tsf_single_source,
 )
-from repro.graph import ell_from_edges, graph_from_edges, paper_dataset
+from repro.graph import paper_dataset
 
 C = 0.6
 K = 20
@@ -32,22 +31,22 @@ def run(quick: bool = True) -> None:
     for name, scale in datasets:
         jax.clear_caches()  # bound XLA-CPU JIT dylib growth across shape sweeps
         src, dst, n = paper_dataset(name, scale=scale)
-        g = graph_from_edges(src, dst, n)
-        in_deg = np.asarray(g.in_deg)
-        eg = ell_from_edges(src, dst, n, k_max=int(in_deg.max()) + 1)
+        in_deg = np.bincount(dst, minlength=n)
+        h = GraphHandle.from_edges(src, dst, n, k_max=int(in_deg.max()) + 1)
         graph_bytes = len(src) * 8
         queries = pick_query_nodes(in_deg, 2)
-        params = make_params(n, c=C, eps_a=0.1, delta=0.01)
+        sess = SimRankSession(h, c=C, eps_a=0.1, delta=0.01, own_graph=False)
 
         candidates: dict[str, dict] = {}
         # ProbeSim — index-free: space overhead == 0
         ts = []
         for u in queries:
-            est, dt = timed(
-                single_source, jax.random.key(int(u)), g, eg, int(u), params,
-                variant="telescoped",
+            env, dt = timed(
+                sess.query,
+                QuerySpec(kind="single_source", node=int(u),
+                          key=jax.random.key(int(u)), variant="telescoped"),
             )
-            e = np.array(est); e[u] = -np.inf
+            e = env.scores.copy(); e[u] = -np.inf
             candidates.setdefault("probesim", {})[int(u)] = np.argsort(-e)[:K]
             ts.append(dt)
         emit(f"large/{name}/probesim_query", float(np.mean(ts)) * 1e6,
@@ -55,11 +54,11 @@ def run(quick: bool = True) -> None:
 
         # TSF — index space is R_g one-way graphs = R_g * n * 4 bytes
         rg, rq = (50, 5) if quick else (300, 40)
-        idx, t_build = timed(build_oneway_index, jax.random.key(1), eg, r_g=rg)
+        idx, t_build = timed(build_oneway_index, jax.random.key(1), h.eg, r_g=rg)
         ts = []
         for u in queries:
             est, dt = timed(
-                tsf_single_source, jax.random.key(int(u)), idx, eg,
+                tsf_single_source, jax.random.key(int(u)), idx, h.eg,
                 np.int32(u), r_q=rq, t=10, c=C,
             )
             e = np.array(est); e[u] = -np.inf
@@ -77,7 +76,7 @@ def run(quick: bool = True) -> None:
             ts = []
             for u in queries:
                 est, dt = timed(
-                    simrank_truncated_single_source, g, int(u), c=C, iters=3
+                    simrank_truncated_single_source, h.g, int(u), c=C, iters=3
                 )
                 e = np.array(est); e[u] = -np.inf
                 candidates.setdefault("topsim", {})[int(u)] = np.argsort(-e)[:K]
@@ -88,7 +87,7 @@ def run(quick: bool = True) -> None:
         for u in queries:
             lists = {s: candidates[s][int(u)] for s in candidates}
             scores = evaluate_with_pool(
-                jax.random.key(777), eg, int(u), lists, K,
+                jax.random.key(777), h.eg, int(u), lists, K,
                 expert_r=2000 if quick else 10_000,
                 sqrt_c=float(np.sqrt(C)), max_len=16,
             )

@@ -4,19 +4,22 @@ Protocol (acceptance: fused >= 5x serial queries/sec at Q = 16 on the
 bench_large quick config, CPU):
 
 * graph: the ``bench_large.py`` quick config (livejournal stand-in,
-  scale 0.004 — n ~ 19k, m ~ 90k, heavy-hub in-degree profile);
+  scale 0.004 — n ~ 19k, m ~ 90k, heavy-hub in-degree profile), owned by
+  one ``GraphHandle``;
 * Q = 16 queries drawn by the paper protocol, anytime walk budget per query
   (512 quick / 2048 full);
 * **serial** replicates the seed engine's ``drain()`` exactly: one query at
   a time, a host chunk loop of ``walk_chunk`` walks with separate
   ``sample_walks`` / ``probe_walks_telescoped`` dispatches per chunk,
   surplus-walk masking in the final chunk, then ``top_k``;
-* **fused** is ``SimRankEngine.drain()`` on the multi-query serve path: the
-  whole batch in one compiled step (pooled sampling + compacted telescoped
-  probe + top-k, DESIGN.md §3).
+* **fused** is ``SimRankSession.drain()`` on the multi-query serve path:
+  the whole batch in one compiled step (pooled sampling + compacted
+  telescoped probe + top-k, DESIGN.md §3).
 
-Results land in ``benchmarks.common.RESULTS['serve']`` and are written to
-``BENCH_serve.json`` by ``run.py`` (or by ``__main__`` here).
+Results land in ``benchmarks.common.RESULTS['serve']`` — including the
+session's ``EngineStats`` dispatch counters (queries per fused step etc.)
+— and are written to ``BENCH_serve.json`` by ``run.py`` (or by
+``__main__`` here).
 """
 from __future__ import annotations
 
@@ -28,11 +31,11 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import RESULTS, emit, pick_query_nodes
+from repro.api import GraphHandle, SimRankSession
 from repro.core import make_params
 from repro.core.probe import probe_walks_telescoped
 from repro.core.walks import sample_walks
-from repro.graph import ell_from_edges, graph_from_edges, paper_dataset
-from repro.serving.engine import SimRankEngine
+from repro.graph import paper_dataset
 
 C = 0.6
 Q = 16
@@ -69,37 +72,36 @@ def run(quick: bool = True) -> dict:
     name, scale = ("livejournal", 0.004)  # bench_large quick config
     budget = 512 if quick else 2048
     src, dst, n = paper_dataset(name, scale=scale)
-    g = graph_from_edges(src, dst, n)
-    in_deg = np.asarray(g.in_deg)
-    eg = ell_from_edges(src, dst, n, k_max=int(in_deg.max()) + 1)
+    in_deg = np.bincount(dst, minlength=n)
+    handle = GraphHandle.from_edges(src, dst, n, k_max=int(in_deg.max()) + 1)
     queries = pick_query_nodes(in_deg, Q)
     params = make_params(n, c=C, eps_a=0.1, delta=0.01)
     key = jax.random.key(0)
 
     # --- serial: the seed algorithm, one query at a time -------------------
     # warm the compile caches on one query, then time the full batch
-    _seed_serial_query(key, g, eg, params, int(queries[0]),
+    _seed_serial_query(key, handle.g, handle.eg, params, int(queries[0]),
                        budget=budget, walk_chunk=SEED_WALK_CHUNK, top_k=TOP_K)
     t0 = time.time()
     serial_results = [
-        _seed_serial_query(jax.random.fold_in(key, i), g, eg, params, int(u),
-                           budget=budget, walk_chunk=SEED_WALK_CHUNK,
-                           top_k=TOP_K)
+        _seed_serial_query(jax.random.fold_in(key, i), handle.g, handle.eg,
+                           params, int(u), budget=budget,
+                           walk_chunk=SEED_WALK_CHUNK, top_k=TOP_K)
         for i, u in enumerate(queries)
     ]
     t_serial = time.time() - t0
     qps_serial = Q / t_serial
 
-    # --- fused: batched drain through the multi-query serve step -----------
-    eng = SimRankEngine(g, eg, c=C, eps_a=0.1, walk_chunk=SEED_WALK_CHUNK,
-                        top_k=TOP_K, batch_q=Q, seed=0)
+    # --- fused: batched session drain through the multi-query serve step ---
+    sess = SimRankSession(handle, c=C, eps_a=0.1, walk_chunk=SEED_WALK_CHUNK,
+                          top_k=TOP_K, batch_q=Q, seed=0)
     for u in queries:  # warm-up drain compiles the fused step for this shape
-        eng.submit(int(u))
-    eng.drain(budget_walks=budget)
+        sess.submit(int(u))
+    sess.drain(budget_walks=budget)
     for u in queries:
-        eng.submit(int(u))
+        sess.submit(int(u))
     t0 = time.time()
-    fused_results = eng.drain(budget_walks=budget)
+    fused_results = sess.drain(budget_walks=budget)
     t_fused = time.time() - t0
     qps_fused = Q / t_fused
     speedup = qps_fused / qps_serial
@@ -111,11 +113,14 @@ def run(quick: bool = True) -> dict:
         for i in range(Q)
     ])
 
+    stats = sess.stats.as_dict()
     emit(f"serve/{name}/serial_drain_q{Q}", t_serial / Q * 1e6,
          f"qps={qps_serial:.3f};budget={budget}")
     emit(f"serve/{name}/fused_drain_q{Q}", t_fused / Q * 1e6,
          f"qps={qps_fused:.3f};budget={budget};speedup={speedup:.2f}x;"
-         f"top10_overlap={overlap:.2f}")
+         f"top10_overlap={overlap:.2f};"
+         f"steps={stats['steps']};queries_per_step="
+         f"{stats['queries'] / max(stats['steps'], 1):.1f}")
     RESULTS["serve"] = dict(
         dataset=name,
         scale=scale,
@@ -131,6 +136,11 @@ def run(quick: bool = True) -> dict:
         serial_s_per_query=t_serial / Q,
         fused_s_per_query=t_fused / Q,
         top10_overlap=float(overlap),
+        # per-step dispatch accounting from the session (2 drains: warmup +
+        # timed), so the artifact records how many queries each compiled
+        # dispatch amortized, alongside the qps it bought
+        session_stats=stats,
+        error_bound_at_budget=float(sess.error_bound(budget)),
     )
     return RESULTS["serve"]
 

@@ -7,17 +7,16 @@ import numpy as np
 import jax
 
 from benchmarks.common import emit, pick_query_nodes, timed
+from repro.api import GraphHandle, QuerySpec, SimRankSession
 from repro.core import (
     build_oneway_index,
-    make_params,
     mc_single_source,
     simrank_power,
     simrank_truncated_single_source,
-    single_source,
     tsf_single_source,
 )
 from repro.core.metrics import kendall_tau, ndcg_at_k, precision_at_k
-from repro.graph import ell_from_edges, graph_from_edges, paper_dataset
+from repro.graph import paper_dataset
 
 C = 0.6
 K = 20
@@ -47,27 +46,27 @@ def run(quick: bool = True) -> None:
     for name, scale in datasets:
         jax.clear_caches()  # bound XLA-CPU JIT dylib growth across shape sweeps
         src, dst, n = paper_dataset(name, scale=scale)
-        g = graph_from_edges(src, dst, n)
-        in_deg = np.asarray(g.in_deg)
-        eg = ell_from_edges(src, dst, n, k_max=int(in_deg.max()) + 1)
-        truth = np.asarray(simrank_power(g, c=C, iters=55))
+        in_deg = np.bincount(dst, minlength=n)
+        h = GraphHandle.from_edges(src, dst, n, k_max=int(in_deg.max()) + 1)
+        truth = np.asarray(simrank_power(h.g, c=C, iters=55))
         queries = pick_query_nodes(in_deg, 3)
 
         systems = {}
-        params = make_params(n, c=C, eps_a=0.05, delta=0.01)
-        systems["probesim"] = lambda u: single_source(
-            jax.random.key(int(u)), g, eg, int(u), params, variant="telescoped"
-        )
+        sess = SimRankSession(h, c=C, eps_a=0.05, delta=0.01, own_graph=False)
+        systems["probesim"] = lambda u: sess.query(QuerySpec(
+            kind="single_source", node=int(u), key=jax.random.key(int(u)),
+            variant="telescoped",
+        )).scores
         systems["mc"] = lambda u: mc_single_source(
-            jax.random.key(int(u)), eg, np.int32(u), r=200, max_len=16,
+            jax.random.key(int(u)), h.eg, np.int32(u), r=200, max_len=16,
             sqrt_c=float(np.sqrt(C)),
         )
         systems["topsim_T3"] = lambda u: simrank_truncated_single_source(
-            g, int(u), c=C, iters=3
+            h.g, int(u), c=C, iters=3
         )
-        idx = build_oneway_index(jax.random.key(1), eg, r_g=50)
+        idx = build_oneway_index(jax.random.key(1), h.eg, r_g=50)
         systems["tsf"] = lambda u: tsf_single_source(
-            jax.random.key(int(u)), idx, eg, np.int32(u), r_q=5, t=10, c=C
+            jax.random.key(int(u)), idx, h.eg, np.int32(u), r_q=5, t=10, c=C
         )
 
         for sysname, fn in systems.items():

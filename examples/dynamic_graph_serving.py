@@ -1,55 +1,62 @@
 """End-to-end driver (the paper's deployment story): serve batched top-k
-SimRank queries on a DYNAMIC graph with the fused update->query epoch engine.
+SimRank queries on a DYNAMIC graph with fused update->query session epochs.
 
-Each ``DynamicEngine.step()`` is ONE compiled dispatch that applies a padded
-batch of edge insertions/deletions to both device mirrors and serves a batch
-of queries on the just-updated graph — zero host transfers between update
-and query, zero index rebuilds (contrast TSF/SLING).  Every result is
-stamped with the graph ``version`` it was computed against, and capacity
-overflow auto-regrows the buffers without losing updates.
+Each ``SimRankSession.epoch()`` is ONE compiled dispatch that applies a
+padded batch of edge insertions/deletions to both device mirrors (owned by
+the session's ``GraphHandle``) and serves a batch of queries on the
+just-updated graph — zero host transfers between update and query, zero
+index rebuilds (contrast TSF/SLING).  Every result is stamped with the
+graph ``version`` it was computed against plus the Thm-1 error bound at
+the walk budget actually spent, and capacity overflow auto-regrows the
+buffers without losing updates.
 
 Run:  PYTHONPATH=src python examples/dynamic_graph_serving.py
 """
 import numpy as np
 
-from repro.graph import ell_from_edges, graph_from_edges, powerlaw_graph
-from repro.serving.dynamic_engine import DynamicEngine
+from repro.api import GraphHandle, SimRankSession
+from repro.graph import powerlaw_graph
 
 
 def main():
     rng = np.random.default_rng(0)
     src, dst, n = powerlaw_graph(5_000, 60_000, seed=0, max_deg=512)
     in_deg = np.bincount(dst, minlength=n)
-    g = graph_from_edges(src, dst, n, capacity=len(src) + 10_000)
-    eg = ell_from_edges(src, dst, n, k_max=int(in_deg.max()) + 64)
-    engine = DynamicEngine(
-        g, eg, c=0.6, eps_a=0.1, top_k=10,
+    handle = GraphHandle.from_edges(
+        src, dst, n,
+        capacity=len(src) + 10_000,  # headroom for the insert stream
+        k_max=int(in_deg.max()) + 64,
+    )
+    sess = SimRankSession(
+        handle, c=0.6, eps_a=0.1, top_k=10,
         batch_q=4, update_batch=64, walk_chunk=256, seed=0,
     )
-    print(f"graph n={n} m={len(src)}; n_r={engine.params.n_r} walks/query; "
-          f"epoch = {engine.update_batch} update ops + "
-          f"{engine.batch_q} queries, one compiled dispatch")
+    print(f"graph n={n} m={len(src)}; n_r={sess.params.n_r} walks/query; "
+          f"epoch = {sess.update_batch} update ops + "
+          f"{sess.batch_q} queries, one compiled dispatch")
 
     queries = rng.choice(np.where(in_deg > 0)[0], 12)
     for i in range(3):
-        # enqueue an update burst: 60 inserts + a few deletions of originals
-        engine.insert(rng.integers(0, n, 60).astype(np.int32),
-                      rng.integers(0, n, 60).astype(np.int32))
-        engine.delete(src[i * 4:i * 4 + 4], dst[i * 4:i * 4 + 4])
-        for u in queries[i * 4:(i + 1) * 4]:
-            engine.submit(int(u))
-        ep = engine.step(budget_walks=512)
+        # one epoch: a 60-insert burst + a few deletions of original edges
+        # + 4 queries, fused into a single compiled dispatch
+        sess.queue_update(rng.integers(0, n, 60).astype(np.int32),
+                          rng.integers(0, n, 60).astype(np.int32))
+        sess.queue_update(src[i * 4:i * 4 + 4], dst[i * 4:i * 4 + 4],
+                          insert=False)
+        ep = sess.epoch(queries=[int(u) for u in queries[i * 4:(i + 1) * 4]],
+                        budget_walks=512)
         print(f"epoch {i}: v{ep.version} "
               f"updates {ep.updates_applied}/{ep.updates_submitted} applied"
               f"{' (overflow->regrown)' if ep.regrown else ''}, "
-              f"{len(ep.results)} queries in {ep.latency_s:.2f}s")
+              f"{len(ep.results)} queries in {ep.latency_s:.2f}s "
+              f"(err bound {ep.results[0].error_bound:.3f} @512 walks)")
         for res in ep.results[:2]:
             print(f"  u={res.node} @v{res.version} "
                   f"top3={list(res.topk_nodes[:3])} "
                   f"scores={[round(float(s), 4) for s in res.topk_scores[:3]]}")
-    s = engine.stats
+    s = sess.stats
     print(f"served {s.queries} queries across {s.epochs} epochs, "
-          f"{s.updates_applied} edge updates applied, {s.regrows} regrows — "
+          f"{s.updates} edge updates applied, {s.regrows} regrows — "
           f"zero index rebuilds (index-free)")
 
 

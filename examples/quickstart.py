@@ -1,72 +1,58 @@
-"""Quickstart: single-source + top-k SimRank with ProbeSim on the paper's
-Figure-1 toy graph, validated against the Power Method (Table 2), plus the
-fused multi-query serve path (many sources, one compiled step) and a fused
-dynamic update->query epoch.
+"""Quickstart: the session API on the paper's Figure-1 toy graph.
+
+One ``GraphHandle`` owns both device mirrors; one ``SimRankSession``
+serves every query shape (single-source vectors, top-k lists, fused
+batches) and every update (immediate or fused update->query epochs).
+Estimates are validated against the Power Method (Table 2).
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 (The README quickstart snippets are excerpts of this file; CI runs both.)
 """
 import numpy as np
 
-import jax
-import jax.numpy as jnp
-
-from repro.core import (
-    make_params,
-    multi_source,
-    simrank_power,
-    single_source,
-    topk,
-)
-from repro.graph import TOY_TABLE2, ell_from_edges, graph_from_edges, toy_graph
-from repro.serving.dynamic_engine import DynamicEngine
-from repro.serving.engine import SimRankEngine
+from repro.api import GraphHandle, QuerySpec, SimRankSession
+from repro.core import simrank_power
+from repro.graph import TOY_TABLE2, toy_graph
 
 
 def main():
     src, dst, n = toy_graph()
-    g = graph_from_edges(src, dst, n)
-    eg = ell_from_edges(src, dst, n)
+    handle = GraphHandle.from_edges(src, dst, n)  # COO push + ELL gather
 
     # the paper's example uses decay c' = 0.25
-    params = make_params(n, c=0.25, eps_a=0.05, delta=0.01)
-    print(f"ProbeSim params: n_r={params.n_r} walks, l_t={params.max_len}, "
-          f"eps={params.eps:.3f} eps_p={params.eps_p:.4f} eps_t={params.eps_t:.3f}")
+    sess = SimRankSession(handle, c=0.25, eps_a=0.05, delta=0.01,
+                          top_k=3, batch_q=3, seed=0)
+    p = sess.params
+    print(f"ProbeSim params: n_r={p.n_r} walks, l_t={p.max_len}, "
+          f"eps={p.eps:.3f} eps_p={p.eps_p:.4f} eps_t={p.eps_t:.3f}")
 
-    key = jax.random.key(0)
-    est = np.asarray(single_source(key, g, eg, 0, params, variant="tree"))
-    truth = np.asarray(simrank_power(g, c=0.25, iters=60))[0]
+    env = sess.query(QuerySpec(kind="single_source", node=0))
+    truth = np.asarray(simrank_power(handle.g, c=0.25, iters=60))[0]
 
     print(f"\n{'node':>5} {'ProbeSim':>9} {'truth':>9} {'Table2':>7}")
     for i, ch in enumerate("abcdefgh"):
-        print(f"{ch:>5} {est[i]:9.4f} {truth[i]:9.4f} {TOY_TABLE2[ch]:7.4f}")
-    err = np.abs(est - truth)[1:].max()
-    print(f"\nmax abs error = {err:.4f}  (guarantee: <= {params.eps_a} "
-          f"w.p. >= {1 - params.delta})")
-    assert err <= params.eps_a
+        print(f"{ch:>5} {env.scores[i]:9.4f} {truth[i]:9.4f} "
+              f"{TOY_TABLE2[ch]:7.4f}")
+    err = np.abs(env.scores - truth)[1:].max()
+    print(f"\nmax abs error = {err:.4f}  (envelope bound: "
+          f"<= {env.error_bound:.4f} w.p. >= {1 - p.delta}, "
+          f"variant={env.variant})")
+    assert err <= env.error_bound
 
-    nodes, scores = topk(key, g, eg, 0, 3, params, variant="tree")
+    tk = sess.query(QuerySpec(kind="topk", node=0, k=3))
     print("top-3 similar to 'a':",
-          [("abcdefgh"[i], round(float(s), 4)) for i, s in zip(nodes, scores)])
+          [("abcdefgh"[i], round(float(s), 4))
+           for i, s in zip(tk.topk_nodes, tk.topk_scores)])
 
-    # --- batched multi-query serving (the fused path) ---------------------
-    # Q sources share one compiled step: pooled walk sampling, one SpMM per
-    # push level for the whole batch, per-query reduction + top-k fused in.
-    us = jnp.array([0, 2, 4])  # a, c, e
-    ests = np.asarray(multi_source(key, g, eg, us, params))
-    truth_all = np.asarray(simrank_power(g, c=0.25, iters=60))
-    for qi, u in enumerate(np.asarray(us)):
-        err = np.abs(ests[qi] - truth_all[u])
-        err[u] = 0
-        print(f"multi_source[{'abcdefgh'[u]}]: max abs error = {err.max():.4f}")
-        assert err.max() <= params.eps_a
-
-    # the serving engine drains queued queries through the same fused step
-    eng = SimRankEngine(g, eg, c=0.25, eps_a=0.05, top_k=3, batch_q=3, seed=0)
-    for u in (0, 2, 4):
-        eng.submit(u)
-    for res in eng.drain():  # one fused dispatch for the whole batch
-        print(f"engine top-3 for '{'abcdefgh'[res.node]}':",
+    # --- batched serving (the fused path) ---------------------------------
+    # queued specs share one compiled step: pooled walk sampling, one SpMM
+    # per push level for the whole batch, per-query reduction + top-k fused
+    # in.  PRNG streams are fixed at submit time, so batch composition
+    # never changes an answer.
+    for u in (0, 2, 4):  # a, c, e
+        sess.submit(u)
+    for res in sess.drain():  # one fused dispatch for the whole batch
+        print(f"fused top-3 for '{'abcdefgh'[res.node]}':",
               [("abcdefgh"[i], round(float(s), 4))
                for i, s in zip(res.topk_nodes, res.topk_scores)])
 
@@ -76,20 +62,19 @@ def main():
     # results carry the graph `version` they were computed against.
     # capacity/k_max reserve headroom for insertions (overflow is flagged
     # and auto-regrown, never silently dropped)
-    gd = graph_from_edges(src, dst, n, capacity=len(src) + 8)
-    egd = ell_from_edges(src, dst, n, k_max=8)
-    deng = DynamicEngine(gd, egd, c=0.25, eps_a=0.05, top_k=3,
-                         batch_q=2, update_batch=4, seed=0)
-    deng.insert([5, 5], [0, 1])  # f->a, f->b: new 2-step meeting paths
-    deng.submit(0)
-    deng.submit(2)
-    ep = deng.step()  # update + query in ONE compiled dispatch
-    print(f"epoch: {ep.updates_applied} updates applied -> graph v{ep.version}")
+    hd = GraphHandle.from_edges(src, dst, n, capacity=len(src) + 8, k_max=8)
+    dsess = SimRankSession(hd, c=0.25, eps_a=0.05, top_k=3,
+                           batch_q=2, update_batch=4, seed=0)
+    ep = dsess.epoch(inserts=([5, 5], [0, 1]),  # f->a, f->b: new paths
+                     queries=[0, 2])  # update + query, ONE dispatch
+    print(f"epoch: {ep.updates_applied} updates applied -> "
+          f"graph v{ep.version}")
     for res in ep.results:
         print(f"dynamic top-3 for '{'abcdefgh'[res.node]}' @v{res.version}:",
               [("abcdefgh"[i], round(float(s), 4))
                for i, s in zip(res.topk_nodes, res.topk_scores)])
     assert all(res.version == 1 for res in ep.results)
+    print(f"session stats: {dsess.stats}")
 
 
 if __name__ == "__main__":

@@ -13,9 +13,9 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.api import GraphHandle, QuerySpec, SimRankSession
 from repro.configs.base import RecsysConfig
-from repro.core import make_params, topk
-from repro.graph import bipartite_graph, ell_from_edges, graph_from_edges
+from repro.graph import bipartite_graph
 from repro.models.recsys.widedeep import init_widedeep, widedeep_forward
 
 
@@ -23,17 +23,18 @@ def main():
     rng = np.random.default_rng(0)
     n_users, n_items = 2_000, 500
     src, dst, n = bipartite_graph(n_users, n_items, 30_000, seed=0)
-    g = graph_from_edges(src, dst, n)
-    in_deg = np.asarray(g.in_deg)
-    eg = ell_from_edges(src, dst, n, k_max=int(in_deg.max()) + 1)
+    handle = GraphHandle.from_edges(src, dst, n)
+    in_deg = np.asarray(handle.g.in_deg)
 
-    # retrieval: top-k items similar to a seed item, via ProbeSim
+    # retrieval: top-k items similar to a seed item, via ProbeSim (fresh
+    # after every interaction — index-free); anytime budget of 2000 walks
     seed_item = n_users + int(np.argmax(in_deg[n_users:]))
-    params = make_params(n, c=0.6, eps_a=0.1, delta=0.05,
-                         n_r_override=2000)
-    nodes, scores = topk(jax.random.key(0), g, eg, seed_item, 50, params,
-                         variant="tree")
-    nodes, scores = np.asarray(nodes), np.asarray(scores)
+    sess = SimRankSession(handle, c=0.6, eps_a=0.1, delta=0.05, top_k=50,
+                          seed=0)
+    env = sess.query(QuerySpec(kind="topk", node=seed_item, k=50,
+                               budget_walks=2000, variant="tree",
+                               key=jax.random.key(0)))
+    nodes, scores = env.topk_nodes, env.topk_scores
     item_mask = nodes >= n_users  # keep item nodes only
     cands = nodes[item_mask][:20] - n_users
     print(f"seed item {seed_item - n_users}: retrieved {len(cands)} candidate "

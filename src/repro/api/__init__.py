@@ -1,0 +1,30 @@
+"""repro.api — the one session surface over the live graph.
+
+``GraphHandle`` owns the coordinated COO+ELL mirror pair (construction,
+updates, regrow, snapshot metadata); ``QuerySpec`` / ``ResultEnvelope``
+are the typed request/response pair; ``SimRankSession`` is the single
+entrypoint unifying one-shot queries, queued fused serving, immediate
+updates and fused update->query epochs.  The legacy engines in
+``repro.serving`` are deprecation shims over this package.
+"""
+from repro.api.handle import GraphHandle
+from repro.api.session import (
+    EngineStats,
+    EpochResult,
+    SimRankSession,
+    UpdateReport,
+)
+from repro.api.spec import QuerySpec, ResultEnvelope, as_spec
+from repro.core.params import abs_error_bound
+
+__all__ = [
+    "GraphHandle",
+    "QuerySpec",
+    "ResultEnvelope",
+    "as_spec",
+    "SimRankSession",
+    "EngineStats",
+    "EpochResult",
+    "UpdateReport",
+    "abs_error_bound",
+]

@@ -1,0 +1,212 @@
+"""`GraphHandle` — ONE object owning the coordinated COO + ELL mirror pair.
+
+ProbeSim needs the graph twice: the COO ``Graph`` is the *push*
+representation (a PROBE level is a segment-sum scatter) and the ELL
+``EllGraph`` is the *gather* representation (TPU-friendly SpMM; also O(1)
+in-neighbor sampling for sqrt(c)-walks).  The seed API made every caller
+thread the ``(g, eg)`` pair by hand through construction, queries, updates
+and regrow — five call sites per benchmark, each a chance to desynchronize
+the mirrors or silently pass the wrong one (``single_source_simple`` did
+exactly that).
+
+``GraphHandle`` owns both mirrors plus the dynamic-graph snapshot metadata
+(``version``, ``overflow``) and the recovery path (``regrow``):
+
+    h = GraphHandle.from_edges(src, dst, n, capacity=m + 1024, k_max=64)
+    h.apply_batch(batch)      # coordinated update of BOTH mirrors
+    if h.overflow:
+        h.regrow()            # compaction + 2x buffers, clears the flag
+
+The handle is a host-side *mutable* owner: ``apply_batch``/``regrow``
+replace the (immutable, jit-ready) mirror pytrees in place, so one name
+always refers to the current snapshot.  The mirrors themselves stay frozen
+``@struct`` pytrees — pass ``h.g`` / ``h.eg`` to jitted code as before.
+``SimRankSession`` (repro.api.session) is the query/update surface over a
+handle; direct mirror access is the escape hatch for baselines and kernels.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.graph.dynamic import (
+    UpdateBatch,
+    apply_update_batch_jit,
+    regrow as _regrow,
+)
+from repro.graph.structs import (
+    EllGraph,
+    Graph,
+    ell_from_edges,
+    graph_from_edges,
+    graph_to_host_edges,
+)
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class GraphHandle:
+    """Owner of the coordinated ``(Graph, EllGraph)`` mirror pair.
+
+    Construct via :meth:`from_edges` (one call builds both mirrors from the
+    same edge list) or directly from an existing pair; ``__post_init__``
+    normalizes legacy mirrors (``version``/``overflow`` = None) to concrete
+    snapshot scalars so the dynamic update paths can thread them.
+    """
+
+    g: Graph
+    eg: EllGraph
+
+    def __post_init__(self) -> None:
+        if self.g.n != self.eg.n:
+            raise ValueError(
+                f"mirror mismatch: COO n={self.g.n} vs ELL n={self.eg.n}"
+            )
+        if self.g.version is None:
+            self.g = self.g.replace(
+                version=jnp.asarray(0, jnp.int32), overflow=jnp.asarray(False)
+            )
+        if self.eg.version is None:
+            self.eg = self.eg.replace(
+                version=jnp.asarray(0, jnp.int32), overflow=jnp.asarray(False)
+            )
+
+    # -- construction --------------------------------------------------------
+
+    @classmethod
+    def from_edges(
+        cls,
+        src: np.ndarray,
+        dst: np.ndarray,
+        n: int,
+        *,
+        capacity: int | None = None,
+        k_max: int | None = None,
+    ) -> "GraphHandle":
+        """Build BOTH mirrors from one host edge list.
+
+        ``capacity`` (COO buffer) and ``k_max`` (ELL row width) reserve
+        headroom for dynamic insertions — pass them whenever the graph will
+        mutate.  Defaults match the bare constructors (exact fit), so a
+        handle built without headroom is bit-identical to the legacy
+        ``graph_from_edges`` + ``ell_from_edges`` pair.
+        """
+        return cls(
+            g=graph_from_edges(src, dst, n, capacity=capacity),
+            eg=ell_from_edges(src, dst, n, k_max=k_max),
+        )
+
+    def copy(self) -> "GraphHandle":
+        """Deep device copy (buffers nobody else references).
+
+        ``SimRankSession`` own-copies its handle at construction because the
+        fused epoch step *donates* the mirror buffers.
+        """
+        return GraphHandle(
+            g=jax.tree.map(lambda a: jnp.array(a, copy=True), self.g),
+            eg=jax.tree.map(lambda a: jnp.array(a, copy=True), self.eg),
+        )
+
+    # -- snapshot metadata ---------------------------------------------------
+
+    @property
+    def n(self) -> int:
+        return self.g.n
+
+    @property
+    def capacity(self) -> int:
+        return self.g.capacity
+
+    @property
+    def k_max(self) -> int:
+        return self.eg.k_max
+
+    @property
+    def num_edges(self) -> int:
+        return int(self.g.num_edges)
+
+    @property
+    def version(self) -> int:
+        """Snapshot id: +1 per applied update batch (mirrors in lockstep)."""
+        return int(self.eg.version) if self.eg.version is not None else -1
+
+    @property
+    def overflow(self) -> bool:
+        """Sticky capacity signal; cleared only by :meth:`regrow`."""
+        return bool(self.g.overflow) if self.g.overflow is not None else False
+
+    # -- updates -------------------------------------------------------------
+
+    def apply_batch(self, batch: UpdateBatch) -> Array:
+        """Apply a padded update batch to BOTH mirrors (coordinated path).
+
+        Replaces the owned mirrors with the post-batch snapshot and returns
+        the per-op ``applied`` mask.  An insert applies iff both mirrors
+        have room; skips set the sticky ``overflow`` flag (never a silent
+        drop) — see graph/dynamic.py for the full contracts.
+        """
+        self.g, self.eg, applied = apply_update_batch_jit(self.g, self.eg, batch)
+        return applied
+
+    def regrow(
+        self,
+        *,
+        capacity: int | None = None,
+        k_max: int | None = None,
+        growth: float = 2.0,
+    ) -> None:
+        """Compact live edges and rebuild both mirrors with headroom.
+
+        Preserves ``version`` (a representation change is not a graph
+        change) and clears ``overflow`` on both mirrors.
+        """
+        self.g, self.eg = _regrow(
+            self.g, self.eg, capacity=capacity, k_max=k_max, growth=growth
+        )
+
+    def to_host_edges(self) -> tuple[np.ndarray, np.ndarray]:
+        """The live (non-padding) edge list on host — rebuild/IO escape hatch."""
+        return graph_to_host_edges(self.g)
+
+    def set_mirrors(
+        self,
+        g: Graph | None = None,
+        eg: EllGraph | None = None,
+        *,
+        copy: bool = True,
+    ) -> None:
+        """Replace owned mirror(s) with externally-built ones, safely.
+
+        Validates ``n``, normalizes missing snapshot fields, and (by
+        default) own-copies the buffers — a handle driven by donated epoch
+        steps must never share arrays with the caller, or donation would
+        invalidate the caller's copies.  Direct field assignment skips all
+        of this; use it only with buffers the handle may own outright.
+        """
+        if g is not None:
+            if g.n != self.n:
+                raise ValueError(f"COO mirror n={g.n} != handle n={self.n}")
+            if g.version is None:
+                g = g.replace(
+                    version=jnp.asarray(0, jnp.int32),
+                    overflow=jnp.asarray(False),
+                )
+            self.g = (
+                jax.tree.map(lambda a: jnp.array(a, copy=True), g) if copy else g
+            )
+        if eg is not None:
+            if eg.n != self.n:
+                raise ValueError(f"ELL mirror n={eg.n} != handle n={self.n}")
+            if eg.version is None:
+                eg = eg.replace(
+                    version=jnp.asarray(0, jnp.int32),
+                    overflow=jnp.asarray(False),
+                )
+            self.eg = (
+                jax.tree.map(lambda a: jnp.array(a, copy=True), eg) if copy else eg
+            )

@@ -1,0 +1,771 @@
+"""`SimRankSession` — the single query/update surface over a live graph.
+
+ProbeSim's selling point is that index-free queries and graph updates are
+the *same* object: a query runs against whatever the graph is NOW.  The
+seed split that story across five query signatures, two engines with
+incompatible result types, and a ``(g, eg)`` mirror pair every caller
+threaded by hand.  The session unifies all of it:
+
+    h = GraphHandle.from_edges(src, dst, n, capacity=m + 4096, k_max=64)
+    sess = SimRankSession(h, eps_a=0.1, top_k=10, batch_q=8)
+
+    env = sess.query(QuerySpec(kind="topk", node=u))     # one-shot
+    for u in nodes:
+        sess.submit(u)                                   # queued ...
+    results = sess.drain(budget_walks=512)               # ... fused batches
+
+    sess.update(inserts=(new_src, new_dst))              # apply NOW
+    ep = sess.epoch(inserts=(s, d), queries=[u1, u2])    # fused upd->query
+
+Three dispatch paths, one surface (each preserves its legacy engine's exact
+PRNG and shape semantics — the deprecation shims in repro.serving delegate
+here and are bit-identical to their pre-session behavior):
+
+* ``query(spec)`` — one-shot, delegates to the core entry points
+  (``single_source``/``topk``/``multi_source*``), so a spec with an
+  explicit ``key`` is bit-identical to the legacy call under that key;
+* ``submit``/``drain`` — the serving path: per-query PRNG streams assigned
+  at submit time, fixed-size repeat-padded batches through the fused
+  multi-query step (one compiled dispatch per batch);
+* ``update``/``epoch`` — updates applied through the coordinated
+  both-mirrors path; ``epoch`` fuses one update batch + one query batch
+  into a single jitted step with zero host transfers in between, and
+  auto-regrows on capacity overflow (nothing is ever silently dropped).
+
+The §4.4 "best of both worlds" switch lives in the session *planner*
+(:meth:`plan`): ``variant='auto'`` picks the deterministic prefix-tree
+probe when the walk pool shares prefixes heavily (n_r >> in-degree of the
+query node — the host-static analogue of the paper's per-level cost
+comparison) and the fused telescoped path otherwise; batched specs always
+take the fused path (it is the only batched one).
+
+Every result is a ``ResultEnvelope`` carrying the graph ``version`` it was
+computed against, the walk budget actually spent, and the Thm-1/2 error
+bound evaluated at that effective budget.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+import warnings
+from collections import deque
+from dataclasses import dataclass, field
+from functools import partial
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.api.handle import GraphHandle
+from repro.api.spec import QuerySpec, ResultEnvelope, as_spec
+from repro.core.multisource import fused_serve_impl, multi_source, multi_source_topk
+from repro.core.params import ProbeSimParams, abs_error_bound, make_params
+from repro.core.probesim import single_source, topk
+from repro.graph.dynamic import (
+    UpdateBatch,
+    apply_update_batch,
+    apply_update_batch_jit,
+    make_update_batch,
+)
+
+Array = jax.Array
+
+
+@dataclass
+class EngineStats:
+    """Dispatch counters, threaded through every session path.
+
+    ``queries``/``updates`` count logical work (queries answered, edge ops
+    applied); ``steps`` counts fused serve dispatches, ``epochs`` fused
+    update->query epochs, ``regrows`` capacity recoveries, ``retries``
+    straggler re-dispatches (incremented by serving.straggler callers).
+    """
+
+    queries: int = 0
+    updates: int = 0
+    steps: int = 0
+    retries: int = 0
+    epochs: int = 0
+    regrows: int = 0
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@dataclass
+class UpdateReport:
+    """Outcome of one immediate ``update()`` call."""
+
+    submitted: int = 0
+    applied: int = 0
+    regrows: int = 0
+    # overflow-skipped inserts, as (src, dst, True) tuples — only populated
+    # when auto_regrow=False (with it, skips are regrown and retried here)
+    skipped: list = field(default_factory=list)
+    version: int = -1
+    overflow: bool = False
+
+
+@dataclass
+class EpochResult:
+    """Outcome of one fused update→query epoch."""
+
+    version: int  # graph snapshot id AFTER the update batch
+    overflow: bool  # sticky capacity signal (pre-regrow value)
+    regrown: bool  # True if auto_regrow ran after this epoch
+    updates_submitted: int  # live (non-padding) ops in the batch
+    updates_applied: int  # ops that changed the graph
+    updates_requeued: int  # overflow-skipped inserts pushed back for retry
+    # overflow-skipped inserts this epoch, as (src, dst, True) tuples.  With
+    # auto_regrow they are also re-queued (updates_requeued); without, the
+    # caller regrows manually and re-submits these — never silently lost
+    skipped_ops: list[tuple[int, int, bool]] = field(default_factory=list)
+    results: list[ResultEnvelope] = field(default_factory=list)
+    latency_s: float = 0.0
+
+
+@partial(
+    jax.jit,
+    static_argnames=(
+        "n_r",
+        "lanes_q",
+        "max_len",
+        "sqrt_c",
+        "eps_p",
+        "eps_t",
+        "truncation_shift",
+        "use_kernel",
+        "top_k",
+    ),
+    # g/eg are donated so the update scan writes the graph buffers in place
+    # (backends that support donation) instead of copying capacity-sized
+    # arrays every epoch — the session owns its graph state (own-copied at
+    # construction) and always replaces it with the returned g'/eg'
+    donate_argnames=("acc", "g", "eg"),
+)
+def epoch_step(
+    g,
+    eg,
+    batch: UpdateBatch,
+    keys: Array,  # [Q] typed PRNG keys, one stream per query
+    us: Array,  # int32 [Q]
+    acc: Array,  # f32 [Q, n] donated accumulator
+    *,
+    n_r: int,
+    lanes_q: int,
+    max_len: int,
+    sqrt_c: float,
+    eps_p: float,
+    eps_t: float,
+    truncation_shift: bool,
+    use_kernel: bool,
+    top_k: int,
+):
+    """One fused epoch: apply the update batch, then serve the query batch.
+
+    Everything happens inside one compiled step on device — the query probe
+    reads the graph buffers the update scan just wrote, with no host
+    round-trip in between.  Returns ``(g', eg', applied, est, idx, vals)``
+    (``idx``/``vals`` are None when ``top_k == 0``); ``g'.version`` /
+    ``g'.overflow`` carry the snapshot id and capacity signal.
+    """
+    g2, eg2, applied = apply_update_batch(g, eg, batch)
+    acc, est, idx, vals = fused_serve_impl(
+        keys, g2, eg2, us, acc,
+        n_r=n_r,
+        lanes_q=lanes_q,
+        max_len=max_len,
+        sqrt_c=sqrt_c,
+        eps_p=eps_p,
+        eps_t=eps_t,
+        truncation_shift=truncation_shift,
+        use_kernel=use_kernel,
+        top_k=top_k,
+    )
+    return g2, eg2, applied, est, idx, vals
+
+
+def _occurrence_numbers(src: np.ndarray, dst: np.ndarray, n: int) -> np.ndarray:
+    """occ[i] = #{j < i : (src[j], dst[j]) == (src[i], dst[i])}, vectorized.
+
+    The np.unique/np.cumsum formulation of the multigraph split: stable-sort
+    ops by pair, number each op by its offset from its pair group's start,
+    scatter back to stream order.  Replaces the O(Q) python dict loop the
+    seed engine used.
+    """
+    pairs = src.astype(np.int64) * np.int64(n + 1) + dst.astype(np.int64)
+    _, inv, counts = np.unique(pairs, return_inverse=True, return_counts=True)
+    if counts.max() <= 1:
+        return np.zeros(len(pairs), np.int64)
+    order = np.argsort(inv, kind="stable")  # stable: stream order per group
+    starts = np.concatenate([[0], np.cumsum(counts)[:-1]])
+    occ = np.empty(len(pairs), np.int64)
+    occ[order] = np.arange(len(pairs)) - np.repeat(starts, counts)
+    return occ
+
+
+class SimRankSession:
+    """Single-host SimRank serving session over an owned :class:`GraphHandle`.
+
+    ``walk_chunk`` is the total lane-column width of the fused serve step;
+    ``batch_q`` the fixed query width of ``drain()``/``epoch()`` batches
+    (short batches are repeat-padded so jit compiles one step per shape);
+    ``update_batch`` the fixed op width of epoch update batches.  ``top_k``
+    is the default k for specs that don't pin one.
+
+    With ``auto_regrow`` (default), capacity overflow triggers host-side
+    compaction into 2x buffers and the skipped inserts are retried — no
+    update is ever lost; with ``auto_regrow=False`` skips are surfaced in
+    the ``UpdateReport``/``EpochResult`` for the caller to handle.
+
+    The session OWNS its graph state (``own_graph=True`` copies the handle
+    at construction): the fused epoch step donates the mirror buffers, so
+    they must not be shared with the caller.  ``own_graph=False`` skips the
+    copy for read-mostly use (queries/updates over a handle the caller
+    keeps authoritative) — ``epoch()`` is disabled there, since donation
+    would invalidate the caller's buffers.  Randomness: every query gets
+    its own PRNG stream — ``fold_in(session_seed, submission_seq)`` — at
+    submit/query time, so batch composition never changes an answer
+    (docs/api.md, "PRNG-stream determinism contract").
+    """
+
+    def __init__(
+        self,
+        handle: GraphHandle,
+        *,
+        c: float = 0.6,
+        eps_a: float = 0.1,
+        delta: float = 0.01,
+        walk_chunk: int = 256,
+        top_k: int = 50,
+        seed: int = 0,
+        batch_q: int = 8,
+        update_batch: int = 64,
+        auto_regrow: bool = True,
+        use_kernel: bool = False,
+        own_graph: bool = True,
+    ):
+        if not isinstance(handle, GraphHandle):
+            raise TypeError(
+                "SimRankSession takes a GraphHandle — build one with "
+                "GraphHandle.from_edges(src, dst, n)"
+            )
+        self.handle = handle.copy() if own_graph else handle
+        self._owns_graph = own_graph
+        self._plan_deg: tuple[int, np.ndarray] | None = None  # (version, in_deg)
+        self.params: ProbeSimParams = make_params(
+            handle.n, c=c, eps_a=eps_a, delta=delta
+        )
+        self.walk_chunk = walk_chunk
+        self.top_k = top_k
+        self.batch_q = batch_q
+        self.update_batch = update_batch
+        self.auto_regrow = auto_regrow
+        self.use_kernel = use_kernel
+        self.key = jax.random.key(seed)
+        self.query_queue: deque[tuple[QuerySpec, Array]] = deque()
+        self.update_queue: deque[tuple[int, int, bool]] = deque()
+        self.stats = EngineStats()
+        self._seq = 0  # submission counter -> per-query PRNG stream
+
+    # -- snapshot state ------------------------------------------------------
+
+    @property
+    def version(self) -> int:
+        """Current graph snapshot id (bumped once per applied update batch)."""
+        return self.handle.version
+
+    @property
+    def overflow(self) -> bool:
+        """Sticky capacity signal (cleared by ``regrow``)."""
+        return self.handle.overflow
+
+    @property
+    def pending(self) -> tuple[int, int]:
+        """(queued update ops, queued queries)."""
+        return len(self.update_queue), len(self.query_queue)
+
+    def error_bound(self, n_r: int | None = None) -> float:
+        """Thm 1+2 absolute-error bound at the effective walk count."""
+        return abs_error_bound(self.params, n=self.handle.n, n_r=n_r)
+
+    def regrow(self, **kwargs) -> None:
+        """Manual capacity recovery (see :meth:`GraphHandle.regrow`)."""
+        self.handle.regrow(**kwargs)
+        self.stats.regrows += 1
+
+    # -- PRNG streams --------------------------------------------------------
+
+    def _query_key(self) -> Array:
+        k = jax.random.fold_in(self.key, self._seq)
+        self._seq += 1
+        return k
+
+    # -- planner -------------------------------------------------------------
+
+    def plan(self, spec: QuerySpec) -> str:
+        """Resolve ``variant='auto'`` — the §4.4 best-of-both-worlds switch.
+
+        Decided on host from static statistics (TPU control flow must be
+        shape-static): batched specs take the fused telescoped path (the
+        only batched one); a single query takes the deterministic
+        prefix-tree probe when its walk pool must share first-step prefixes
+        heavily — n_r >= 8 x in-degree(u), the host analogue of the paper's
+        per-level deterministic-vs-randomized cost comparison — and the
+        fused telescoped path otherwise.
+        """
+        if spec.variant != "auto":
+            return spec.variant
+        if spec.nodes is not None:
+            return "telescoped"
+        n_r = spec.budget_walks or self.params.n_r
+        # host in-degree snapshot, refreshed once per graph version — the
+        # planner must not pay a device->host sync per query on the hot path
+        if self._plan_deg is None or self._plan_deg[0] != self.version:
+            self._plan_deg = (self.version, np.asarray(self.handle.eg.in_deg))
+        d = int(self._plan_deg[1][spec.node])
+        if d > 0 and n_r >= 8 * d:
+            return "tree"
+        return "telescoped"
+
+    # -- one-shot queries ----------------------------------------------------
+
+    def query(
+        self, spec: QuerySpec | int, *, budget_walks: int | None = None
+    ) -> ResultEnvelope:
+        """Serve one spec now, bypassing the queue.
+
+        Delegates to the core entry points, so results under an explicit
+        ``spec.key`` are bit-identical to the legacy calls: single-node
+        specs reproduce ``single_source(key, ...)`` / ``topk(key, ...)``
+        (key-split semantics), batched specs ``multi_source(_topk)`` (a
+        ``[Q]`` key array is passed through as per-query streams).  With
+        ``spec.key=None`` the session assigns its own submit-order streams.
+        """
+        spec = as_spec(spec, default_k=self.top_k)
+        if budget_walks is not None and spec.budget_walks is None:
+            spec = dataclasses.replace(spec, budget_walks=budget_walks)
+        variant = self.plan(spec)
+        n_r = spec.budget_walks or self.params.n_r
+        g, eg = self.handle.g, self.handle.eg
+        t0 = time.time()
+        if spec.nodes is None:
+            p = (
+                self.params
+                if spec.budget_walks is None
+                else dataclasses.replace(self.params, n_r=n_r)
+            )
+            key = spec.key if spec.key is not None else self._query_key()
+            if spec.kind == "single_source":
+                est = single_source(
+                    key, g, eg, spec.node, p, variant=variant,
+                    walk_chunk=self.walk_chunk, use_kernel=self.use_kernel,
+                )
+                out = dict(scores=np.asarray(est))
+            else:
+                idx, vals = topk(
+                    key, g, eg, spec.node, spec.k, p, variant=variant,
+                    walk_chunk=self.walk_chunk, use_kernel=self.use_kernel,
+                )
+                out = dict(topk_nodes=np.asarray(idx), topk_scores=np.asarray(vals))
+        else:
+            if variant != "telescoped":
+                raise ValueError(
+                    f"batched specs require the fused telescoped path, "
+                    f"got variant={variant!r}"
+                )
+            us = jnp.asarray(spec.nodes, jnp.int32)
+            key, keys = self._multi_keys(spec)
+            common = dict(
+                lanes=self.walk_chunk, n_r=spec.budget_walks, keys=keys,
+                use_kernel=self.use_kernel,
+            )
+            if spec.kind == "single_source":
+                est = multi_source(key, g, eg, us, self.params, **common)
+                out = dict(scores=np.asarray(est))
+            else:
+                idx, vals = multi_source_topk(
+                    key, g, eg, us, spec.k, self.params, **common
+                )
+                out = dict(topk_nodes=np.asarray(idx), topk_scores=np.asarray(vals))
+        dt = time.time() - t0
+        self.stats.steps += 1
+        self.stats.queries += spec.q
+        return ResultEnvelope(
+            kind=spec.kind,
+            node=spec.node,
+            nodes=spec.nodes,
+            walks_used=n_r,
+            latency_s=dt,
+            version=self.version,
+            error_bound=self.error_bound(n_r),
+            variant=variant,
+            **out,
+        )
+
+    def _multi_keys(self, spec: QuerySpec):
+        """(key, keys) for a batched spec — exactly one of the two is set."""
+        q = spec.q
+        if spec.key is None:
+            return None, jnp.stack([self._query_key() for _ in range(q)])
+        k = spec.key
+        if getattr(k, "ndim", 0) == 1:
+            if k.shape[0] != q:
+                raise ValueError(
+                    f"per-query key array has {k.shape[0]} streams "
+                    f"for {q} nodes"
+                )
+            return None, k
+        return k, None  # scalar key: legacy split semantics
+
+    # -- queued serving (submit -> fused drain) ------------------------------
+
+    def submit(self, spec: QuerySpec | int) -> None:
+        """Enqueue a single-node spec (PRNG stream fixed NOW: batch-invariant)."""
+        spec = as_spec(spec, default_k=self.top_k)
+        if spec.nodes is not None:
+            raise ValueError("submit takes single-node specs; use query() "
+                             "for an explicit batch")
+        if spec.variant not in ("auto", "telescoped"):
+            raise ValueError(
+                "queued serving uses the fused telescoped path; "
+                f"variant={spec.variant!r} is only available via query()"
+            )
+        key = spec.key if spec.key is not None else self._query_key()
+        self.query_queue.append((spec, key))
+
+    def _batch_group(self, spec: QuerySpec):
+        """Specs that can share one fused dispatch (same shapes/budget)."""
+        return (spec.kind, spec.k, spec.budget_walks)
+
+    def _pop_query_batch(self) -> tuple[list[tuple[QuerySpec, Array]], int]:
+        """Pop up to ``batch_q`` group-compatible specs; repeat-pad the rest."""
+        gid = self._batch_group(self.query_queue[0][0])
+        batch: list[tuple[QuerySpec, Array]] = []
+        while (
+            self.query_queue
+            and len(batch) < self.batch_q
+            and self._batch_group(self.query_queue[0][0]) == gid
+        ):
+            batch.append(self.query_queue.popleft())
+        live = len(batch)
+        while len(batch) < self.batch_q:
+            batch.append(batch[-1])  # pad with repeats: static shape
+        return batch, live
+
+    def _serve_fused(
+        self,
+        batch: list[tuple[QuerySpec, Array]],
+        budget_walks: int | None,
+    ) -> list[ResultEnvelope]:
+        """One fused dispatch for a (possibly repeat-padded) query batch."""
+        spec0 = batch[0][0]
+        n_r = spec0.budget_walks or budget_walks or self.params.n_r
+        us = jnp.asarray([s.node for s, _ in batch], jnp.int32)
+        keys = jnp.stack([k for _, k in batch])
+        g, eg = self.handle.g, self.handle.eg
+        t0 = time.time()
+        if spec0.kind == "topk":
+            idx, vals = multi_source_topk(
+                None, g, eg, us, spec0.k, self.params,
+                lanes=self.walk_chunk, n_r=n_r, keys=keys,
+                use_kernel=self.use_kernel,
+            )
+            idx = np.asarray(idx)  # device sync
+            vals = np.asarray(vals)
+            est = None
+        else:
+            est = np.asarray(multi_source(
+                None, g, eg, us, self.params,
+                lanes=self.walk_chunk, n_r=n_r, keys=keys,
+                use_kernel=self.use_kernel,
+            ))
+        dt = time.time() - t0
+        self.stats.steps += 1
+        ver = self.version
+        bound = self.error_bound(n_r)
+        return [
+            ResultEnvelope(
+                kind=spec0.kind,
+                node=s.node,
+                scores=None if est is None else est[i],
+                topk_nodes=None if est is not None else idx[i],
+                topk_scores=None if est is not None else vals[i],
+                walks_used=n_r,
+                latency_s=dt,
+                version=ver,
+                error_bound=bound,
+                variant="telescoped",
+            )
+            for i, (s, _) in enumerate(batch)
+        ]
+
+    def drain(self, *, budget_walks: int | None = None) -> list[ResultEnvelope]:
+        """Serve every queued spec in fused batches of ``batch_q``.
+
+        Consecutive group-compatible specs (same kind/k/budget) share a
+        dispatch; short or cut batches are padded by repeating the last
+        entry (padded slots recompute an already-served query and are
+        discarded).  ``budget_walks`` caps specs that don't pin their own.
+        """
+        out: list[ResultEnvelope] = []
+        while self.query_queue:
+            batch, live = self._pop_query_batch()
+            out.extend(self._serve_fused(batch, budget_walks)[:live])
+            self.stats.queries += live
+        return out
+
+    # -- immediate updates ---------------------------------------------------
+
+    def _validate_ops(self, src: np.ndarray, dst: np.ndarray) -> None:
+        # validate HERE: out-of-range ids would be sentinel-masked to no-ops
+        # downstream and then mistaken for capacity-overflow skips, feeding
+        # an unbounded retry/regrow loop
+        n = self.handle.n
+        bad = (src < 0) | (src >= n) | (dst < 0) | (dst >= n)
+        if bad.any():
+            i = int(np.argmax(bad))
+            raise ValueError(
+                f"edge op ({src[i]}, {dst[i]}) out of range for n={n}"
+            )
+
+    @staticmethod
+    def _as_ops(edges) -> tuple[np.ndarray, np.ndarray]:
+        src, dst = edges
+        return (np.asarray(src, np.int32).reshape(-1),
+                np.asarray(dst, np.int32).reshape(-1))
+
+    def update(self, inserts=None, deletes=None) -> UpdateReport:
+        """Apply edge updates NOW through the coordinated both-mirrors path.
+
+        ``inserts``/``deletes`` are ``(src, dst)`` array pairs; inserts
+        apply before deletes within one call.  Deleting duplicate (s, d)
+        pairs in one call removes one copy per op (multigraph semantics):
+        the batch path deletes at most one copy per batch, so duplicates
+        are split into per-occurrence sub-batches (vectorized — see
+        ``_occurrence_numbers``).  Batches are padded to the next power of
+        two so variable-size bursts reuse a log-bounded set of compiled
+        shapes.  With ``auto_regrow``, overflow-skipped inserts trigger a
+        regrow and are retried until applied; otherwise they are surfaced
+        in ``UpdateReport.skipped``.
+        """
+        rep = UpdateReport()
+        if inserts is not None:
+            s, d = self._as_ops(inserts)
+            self._validate_ops(s, d)
+            self._apply_now(s, d, True, rep)
+        if deletes is not None:
+            s, d = self._as_ops(deletes)
+            self._validate_ops(s, d)
+            if s.shape[0]:
+                occ = _occurrence_numbers(s, d, self.handle.n)
+                for k in range(int(occ.max()) + 1):
+                    m = occ == k
+                    self._apply_now(s[m], d[m], False, rep)
+        rep.version = self.version
+        rep.overflow = self.overflow
+        return rep
+
+    def _apply_now(
+        self, src: np.ndarray, dst: np.ndarray, insert: bool, rep: UpdateReport
+    ) -> None:
+        if src.shape[0] == 0:
+            return
+        rep.submitted += int(src.shape[0])
+        while True:
+            # pad to the next power of two so variable-size update bursts
+            # reuse a log-bounded set of compiled batch shapes
+            bucket = 1 << (int(src.shape[0]) - 1).bit_length()
+            batch = make_update_batch(
+                src, dst, insert, batch_size=bucket, n=self.handle.n
+            )
+            applied = np.asarray(self.handle.apply_batch(batch))[: src.shape[0]]
+            n_app = int(applied.sum())
+            rep.applied += n_app
+            self.stats.updates += n_app
+            if not insert:
+                return  # unapplied deletes were genuinely absent: no retry
+            skipped = ~applied
+            if not skipped.any():
+                return
+            if not self.auto_regrow:
+                rep.skipped += [
+                    (int(s), int(d), True)
+                    for s, d in zip(src[skipped], dst[skipped])
+                ]
+                return
+            self.handle.regrow()  # 2x buffers per round: terminates
+            self.stats.regrows += 1
+            rep.regrows += 1
+            src, dst = src[skipped], dst[skipped]
+
+    # -- fused update->query epochs ------------------------------------------
+
+    def queue_update(self, src, dst, *, insert: bool = True) -> None:
+        """Enqueue edge ops for the next :meth:`epoch` step(s)."""
+        s, d = self._as_ops((src, dst))
+        self._validate_ops(s, d)
+        for a, b in zip(s, d):
+            self.update_queue.append((int(a), int(b), insert))
+
+    def _pop_updates(self) -> tuple[list[tuple[int, int, bool]], UpdateBatch]:
+        # apply_update_batch runs its delete phase before its insert phase
+        # and deletes at most one copy of a (s, d) pair per batch, so a batch
+        # must not contain (a) a delete of an edge inserted earlier in the
+        # SAME batch, nor (b) a second delete of the same pair (multigraph
+        # copies) — cut the epoch's batch there (the delete waits for the
+        # next epoch) to preserve exact stream order
+        ops: list[tuple[int, int, bool]] = []
+        inserted: set[tuple[int, int]] = set()
+        deleted: set[tuple[int, int]] = set()
+        while self.update_queue and len(ops) < self.update_batch:
+            s, d, ins = self.update_queue[0]
+            if not ins and ((s, d) in inserted or (s, d) in deleted):
+                break
+            (inserted if ins else deleted).add((s, d))
+            ops.append(self.update_queue.popleft())
+        batch = make_update_batch(
+            [s for s, _, _ in ops],
+            [d for _, d, _ in ops],
+            [i for _, _, i in ops] if ops else True,
+            batch_size=self.update_batch,
+            n=self.handle.n,
+        )
+        return ops, batch
+
+    def _pop_epoch_queries(self) -> tuple[int, list, QuerySpec]:
+        qs, live = self._pop_query_batch()  # same grouping/padding as drain
+        return live, qs, qs[0][0]
+
+    def epoch(
+        self,
+        *,
+        inserts=None,
+        deletes=None,
+        queries=None,
+        budget_walks: int | None = None,
+    ) -> EpochResult:
+        """Run ONE fused epoch: up to ``update_batch`` queued ops + up to
+        ``batch_q`` queued queries in a single compiled dispatch.
+
+        ``inserts``/``deletes`` (``(src, dst)`` pairs) and ``queries``
+        (node ids or single-node specs) are enqueued first — anything past
+        one epoch's width stays queued (see :attr:`pending`; loop epochs to
+        drain).  Scores are exact w.r.t. the post-update snapshot (zero
+        host transfers between update and query); a top-k query batch runs
+        the fused top-k epilogue, a single_source batch returns full score
+        vectors.  Update-only epochs (empty query queue) dispatch just the
+        batch application — no point paying the fused probe for discarded
+        dummy queries.
+        """
+        if not self._owns_graph:
+            # epoch_step DONATES the mirror buffers; on a shared handle that
+            # would invalidate every other reference to them (CPU ignores
+            # donation, so this would pass tests and corrupt in production)
+            raise ValueError(
+                "epoch() requires an owned graph: construct the session "
+                "with own_graph=True (the default)"
+            )
+        if inserts is not None:
+            self.queue_update(*self._as_ops(inserts), insert=True)
+        if deletes is not None:
+            self.queue_update(*self._as_ops(deletes), insert=False)
+        if queries is not None:
+            for q in queries:
+                self.submit(q)
+        ops, batch = self._pop_updates()
+        p = self.params
+
+        t0 = time.time()
+        if self.query_queue:
+            live_q, qs, spec0 = self._pop_epoch_queries()
+            n_r = spec0.budget_walks or budget_walks or p.n_r
+            tk = spec0.k if spec0.kind == "topk" else 0
+            us = jnp.asarray([s.node for s, _ in qs], jnp.int32)
+            keys = jnp.stack([k for _, k in qs])
+            acc = jnp.zeros((self.batch_q, self.handle.n), jnp.float32)
+            g2, eg2, applied, est, idx, vals = epoch_step(
+                self.handle.g, self.handle.eg, batch, keys, us, acc,
+                n_r=n_r,
+                lanes_q=max(1, self.walk_chunk // self.batch_q),
+                max_len=p.max_len,
+                sqrt_c=p.sqrt_c,
+                eps_p=p.eps_p,
+                eps_t=p.eps_t,
+                truncation_shift=p.truncation_shift,
+                use_kernel=self.use_kernel,
+                top_k=tk,
+            )
+            if tk:
+                idx = np.asarray(idx)  # device sync (materializes g2/eg2)
+                vals = np.asarray(vals)
+                est = None
+            else:
+                est = np.asarray(est)
+        else:
+            live_q, qs, spec0 = 0, [], None
+            n_r = budget_walks or p.n_r
+            g2, eg2, applied = apply_update_batch_jit(
+                self.handle.g, self.handle.eg, batch
+            )
+        applied = np.asarray(applied)[: len(ops)]
+        dt = time.time() - t0
+        self.handle.g, self.handle.eg = g2, eg2
+
+        version = self.version
+        overflow = self.overflow
+        regrown = False
+        requeued = 0
+        # skipped inserts (applied == False); unapplied deletes were
+        # genuinely absent — those are not retried or surfaced
+        skipped = [op for op, ok in zip(ops, applied) if not ok and op[2]]
+        if skipped and self.auto_regrow:
+            # retry on the regrown buffers next epoch
+            for op in reversed(skipped):
+                self.update_queue.appendleft(op)
+            requeued = len(skipped)
+            self.handle.regrow()
+            self.stats.regrows += 1
+            regrown = True
+
+        bound = self.error_bound(n_r)
+        results = [
+            ResultEnvelope(
+                kind=spec0.kind,
+                node=s.node,
+                scores=None if est is None else est[i],
+                topk_nodes=None if est is not None else idx[i],
+                topk_scores=None if est is not None else vals[i],
+                walks_used=n_r,
+                latency_s=dt,
+                version=version,
+                error_bound=bound,
+                variant="telescoped",
+            )
+            for i, (s, _) in enumerate(qs[:live_q])
+        ]
+        self.stats.epochs += 1
+        self.stats.steps += 1
+        self.stats.queries += live_q
+        self.stats.updates += int(applied.sum())
+        return EpochResult(
+            version=version,
+            overflow=overflow,
+            regrown=regrown,
+            updates_submitted=len(ops),
+            updates_applied=int(applied.sum()),
+            updates_requeued=requeued,
+            skipped_ops=skipped,
+            results=results,
+            latency_s=dt,
+        )
+
+    def drain_epochs(
+        self, *, budget_walks: int | None = None
+    ) -> list[EpochResult]:
+        """Run epochs until both queues are empty."""
+        out: list[EpochResult] = []
+        while self.update_queue or self.query_queue:
+            out.append(self.epoch(budget_walks=budget_walks))
+        return out

@@ -14,7 +14,7 @@ Public API:
 """
 from repro.core.montecarlo import mc_pool_scores, mc_single_pair, mc_single_source
 from repro.core.multisource import multi_source, multi_source_topk
-from repro.core.params import ProbeSimParams, make_params
+from repro.core.params import ProbeSimParams, abs_error_bound, make_params
 from repro.core.pooling import build_pool, evaluate_with_pool, pooled_ground_truth
 from repro.core.power import (
     simrank_power,
@@ -36,6 +36,7 @@ from repro.core.walks import sample_walks, walk_lengths
 __all__ = [
     "ProbeSimParams",
     "make_params",
+    "abs_error_bound",
     "single_source",
     "single_source_simple",
     "multi_source",

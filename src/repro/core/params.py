@@ -35,6 +35,32 @@ class ProbeSimParams:
         return math.sqrt(self.c)
 
 
+def abs_error_bound(
+    params: ProbeSimParams, *, n: int, n_r: int | None = None
+) -> float:
+    """Theorem 1+2 absolute-error bound at the EFFECTIVE walk count.
+
+    Inverting Thm 1 (``n_r = ceil(3c/eps^2 ln(n/delta))``) gives the
+    sampling error a pool of ``n_r`` walks actually guarantees,
+
+        eps(n_r) = sqrt(3 c ln(n / delta) / n_r),
+
+    and Thm 2 stacks the pruning and truncation shares on top.  Anytime
+    queries (``budget_walks`` < the full Thm-1 budget) therefore report the
+    looser bound they really provide; at the full budget this reproduces
+    ``params.eps_a`` (up to the ceil slack in n_r).
+    """
+    r = int(params.n_r if n_r is None else n_r)
+    if r < 1:
+        raise ValueError(f"n_r must be >= 1, got {r}")
+    eps_eff = math.sqrt(3.0 * params.c * math.log(n / params.delta) / r)
+    return (
+        eps_eff
+        + (1.0 + eps_eff) / (1.0 - params.sqrt_c) * params.eps_p
+        + params.eps_t / 2.0
+    )
+
+
 def make_params(
     n: int,
     c: float = 0.6,

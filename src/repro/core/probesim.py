@@ -159,7 +159,7 @@ def topk(
 
 def single_source_simple(
     key: Array,
-    eg: EllGraph,
+    eg,
     u: int,
     *,
     n: int | None = None,
@@ -168,6 +168,28 @@ def single_source_simple(
     delta: float = 0.01,
     **kwargs,
 ) -> Array:
-    """Convenience wrapper: build params from (eps_a, delta) and run."""
+    """DEPRECATED convenience wrapper — prefer a ``GraphHandle``.
+
+    The legacy form takes a bare ``EllGraph`` and silently uses it as BOTH
+    the push and the gather representation (i.e. it is exactly
+    ``single_source(key, eg, eg, u, ...)`` — correct, but it forfeits the
+    COO push mirror without saying so).  Pass a
+    :class:`repro.api.GraphHandle` instead and the mirror choice is
+    explicit: the handle's COO ``g`` pushes, its ELL ``eg`` gathers.
+    """
+    from repro.api.handle import GraphHandle  # local: core <-> api layering
+
+    if isinstance(eg, GraphHandle):
+        params = make_params(n or eg.n, c=c, eps_a=eps_a, delta=delta)
+        return single_source(key, eg.g, eg.eg, u, params, **kwargs)
+    import warnings
+
+    warnings.warn(
+        "single_source_simple(eg) uses the ELL table as both the push and "
+        "gather mirror; pass a repro.api.GraphHandle (explicit mirrors) or "
+        "call single_source / SimRankSession.query directly",
+        DeprecationWarning,
+        stacklevel=2,
+    )
     params = make_params(n or eg.n, c=c, eps_a=eps_a, delta=delta)
     return single_source(key, eg, eg, u, params, **kwargs)

@@ -1,7 +1,7 @@
 """Serving launcher — the paper's end-to-end driver.
 
-Runs the SimRank query engine against a synthetic power-law graph with a
-dynamic update stream interleaved between query batches (the paper's §1
+Runs a ``SimRankSession`` against a synthetic power-law graph with a
+dynamic update stream interleaved between query dispatches (the paper's §1
 motivation: index-free => updates are free).  Reports per-query latency and
 top-k results; optional straggler policy wraps dispatch.
 
@@ -16,10 +16,7 @@ import time
 
 import numpy as np
 
-import jax
-
-from repro.graph import ell_from_edges, graph_from_edges, powerlaw_graph
-from repro.serving.engine import SimRankEngine
+from repro.api import GraphHandle, QuerySpec, SimRankSession
 from repro.serving.straggler import HedgePolicy, dispatch
 
 
@@ -38,16 +35,21 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
+    from repro.graph import powerlaw_graph
+
     rng = np.random.default_rng(args.seed)
     src, dst, n = powerlaw_graph(args.nodes, args.edges, seed=args.seed)
-    g = graph_from_edges(src, dst, n, capacity=len(src) + 100_000)
     in_deg = np.bincount(dst, minlength=n)
-    eg = ell_from_edges(src, dst, n, k_max=int(in_deg.max()) + 8)
-    engine = SimRankEngine(
-        g, eg, c=args.c, eps_a=args.eps_a, top_k=args.top_k, seed=args.seed
+    handle = GraphHandle.from_edges(
+        src, dst, n,
+        capacity=len(src) + 100_000,
+        k_max=int(in_deg.max()) + 8,
     )
-    print(f"graph: n={n} m={len(src)}; n_r={engine.params.n_r} walks/query "
-          f"(eps_a={args.eps_a}), max_len={engine.params.max_len}")
+    sess = SimRankSession(
+        handle, c=args.c, eps_a=args.eps_a, top_k=args.top_k, seed=args.seed
+    )
+    print(f"graph: n={n} m={len(src)}; n_r={sess.params.n_r} walks/query "
+          f"(eps_a={args.eps_a}), max_len={sess.params.max_len}")
 
     query_nodes = rng.choice(np.where(in_deg > 0)[0], size=args.queries)
     lat = []
@@ -56,29 +58,36 @@ def main() -> None:
         ins_src = rng.integers(0, n, args.updates_per_batch).astype(np.int32)
         ins_dst = rng.integers(0, n, args.updates_per_batch).astype(np.int32)
         t0 = time.time()
-        engine.insert(ins_src, ins_dst)
+        upd = sess.update(inserts=(ins_src, ins_dst))
         upd_t = time.time() - t0
 
         if args.deadline_s:
+            def on_retry(attempt):
+                sess.stats.retries += 1
+                print(f"  retry {attempt} (shed budget)")
+
+            # dispatch injects budget_walks per attempt (shed on retries)
             res = dispatch(
-                engine.run_query, int(u),
+                sess.query, QuerySpec(kind="topk", node=int(u)),
                 policy=HedgePolicy(deadline_s=args.deadline_s),
-                budget=args.walk_budget or engine.params.n_r,
-                on_retry=lambda a: print(f"  retry {a} (shed budget)"),
+                budget=args.walk_budget or sess.params.n_r,
+                on_retry=on_retry,
             )
         else:
-            res = engine.run_query(int(u), budget_walks=args.walk_budget)
+            res = sess.query(QuerySpec(kind="topk", node=int(u),
+                                       budget_walks=args.walk_budget))
         lat.append(res.latency_s)
         top3 = ", ".join(
             f"{nn}:{s:.4f}" for nn, s in
             zip(res.topk_nodes[:3], res.topk_scores[:3])
         )
-        print(f"q{i} u={u}: update({args.updates_per_batch} edges)={upd_t*1e3:.1f}ms "
-              f"query={res.latency_s:.2f}s top3=[{top3}]")
+        print(f"q{i} u={u}: update({upd.applied} edges)={upd_t*1e3:.1f}ms "
+              f"query={res.latency_s:.2f}s v{res.version} top3=[{top3}]")
     lat = np.array(lat)
     print(f"latency: mean={lat.mean():.2f}s p50={np.percentile(lat,50):.2f}s "
           f"p99={np.percentile(lat,99):.2f}s; "
-          f"updates applied: {engine.stats.updates}")
+          f"updates applied: {sess.stats.updates}; "
+          f"dispatches: {sess.stats.steps}; retries: {sess.stats.retries}")
 
 
 if __name__ == "__main__":

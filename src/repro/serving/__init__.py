@@ -1,0 +1,18 @@
+"""repro.serving — deprecated engines (shims over ``repro.api``) + straggler.
+
+``SimRankEngine`` and ``DynamicEngine`` delegate to
+``repro.api.SimRankSession``; new code should use the session directly.
+``serving.straggler`` (deadline/hedge/shed dispatch policies) remains the
+canonical home for tail-latency mitigation around any query callable.
+"""
+from repro.serving.dynamic_engine import DynamicEngine, DynamicStats, EpochResult
+from repro.serving.engine import EngineStats, QueryResult, SimRankEngine
+
+__all__ = [
+    "SimRankEngine",
+    "DynamicEngine",
+    "QueryResult",
+    "EpochResult",
+    "EngineStats",
+    "DynamicStats",
+]

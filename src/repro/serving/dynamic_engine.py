@@ -1,160 +1,42 @@
-"""Dynamic serving engine — fused update→query *epochs* on device.
+"""DEPRECATED: ``DynamicEngine`` is a thin shim over ``repro.api``.
 
-The paper's headline claim is that ProbeSim is index-free and therefore
-"can naturally support real-time SimRank queries on dynamic graphs".
-``SimRankEngine`` serves a graph that mutates *between* dispatches;
-``DynamicEngine`` goes one step further and makes the update part of the
-serve step itself: one jitted **epoch step**
+The session API absorbs the fused update->query epoch path: the jitted
+``epoch_step`` and the epoch loop (batch cutting, overflow requeue,
+auto-regrow) now live in ``repro.api.session``; ``SimRankSession.epoch``
+is the one entrypoint for "apply an update batch and serve a query batch
+in a single compiled dispatch".  This module remains so existing callers
+keep working; it delegates to an owned session and is bit-identical to the
+pre-session engine under the same PRNG seed.
 
-    (graph_state, update_batch, query_batch) -> (graph_state', scores)
+Migration:
 
-applies a fixed-size padded batch of edge insertions/deletions to both
-device mirrors (COO + ELL, ``graph.dynamic.apply_update_batch``) and then
-runs the fused multi-query probe (``core.multisource.fused_serve_impl``) on
-the *updated* graph — with **zero host transfers between update and query**.
-Scores returned by an epoch are therefore exact w.r.t. the post-update
-snapshot; the snapshot's ``version`` is stamped on every result.
+    eng = DynamicEngine(g, eg, top_k=10, batch_q=4, update_batch=64)  # old
+    eng.insert(s, d); eng.submit(u); ep = eng.step()
 
-Contrast with the paper's index-based competitors: TSF must rebuild its R_g
-one-way graphs and SLING its whole index before the first fresh query; here
-update→queryable latency is one O(B) on-device batch application
-(``benchmarks/bench_dynamic.py`` measures both paths).
-
-Shapes are static per (update_batch, batch_q, …) configuration, so jit
-compiles ONE epoch step and every epoch reuses it:
-
-* update batches are padded to ``update_batch`` ops with sentinel no-op
-  edges (masked everywhere — an all-padding batch is an identity update);
-* query batches are padded to ``batch_q`` by repeating the last live query
-  (padded slots recompute an already-answered query and are discarded);
-* capacity overflow is an explicit signal, not a silent drop: inserts that
-  find no room (COO buffer or ELL row) are skipped in both mirrors, flagged
-  sticky on the returned state, and — with ``auto_regrow`` — retried on the
-  next epoch after a host-side ``regrow`` (compaction + 2x buffers).
-
-Randomness: like ``SimRankEngine``, every query gets its own PRNG stream at
-submit time (fold_in of the engine seed and the submission sequence number),
-so epoch batching never changes a query's answer (docs/api.md).
-
-Usage::
-
-    eng = DynamicEngine(g, eg, top_k=10, batch_q=4, update_batch=64)
-    eng.insert(new_src, new_dst)      # enqueue updates ...
-    eng.delete(old_src, old_dst)
-    for u in nodes:
-        eng.submit(u)                 # ... and queries
-    ep = eng.step()                   # ONE compiled dispatch: update + query
-    for res in ep.results:
-        print(res.node, res.version, res.topk_nodes)
+    sess = SimRankSession(GraphHandle(g=g, eg=eg),                    # new
+                          top_k=10, batch_q=4, update_batch=64)
+    ep = sess.epoch(inserts=(s, d), queries=[u])
 """
 from __future__ import annotations
 
-import time
-from collections import deque
-from dataclasses import dataclass, field
-from functools import partial
+import warnings
+from dataclasses import dataclass
 
-import numpy as np
-
-import jax
-import jax.numpy as jnp
-
-from repro.core.multisource import fused_serve_impl
-from repro.core.params import ProbeSimParams, make_params
-from repro.graph.dynamic import (
-    UpdateBatch,
-    apply_update_batch,
-    apply_update_batch_jit,
-    make_update_batch,
-    regrow,
+from repro.api.handle import GraphHandle
+from repro.api.session import (  # re-exported for legacy importers
+    EpochResult,
+    SimRankSession,
+    epoch_step,
 )
 from repro.graph.structs import EllGraph, Graph
-from repro.serving.engine import QueryResult
 
-Array = jax.Array
-
-
-@partial(
-    jax.jit,
-    static_argnames=(
-        "n_r",
-        "lanes_q",
-        "max_len",
-        "sqrt_c",
-        "eps_p",
-        "eps_t",
-        "truncation_shift",
-        "use_kernel",
-        "top_k",
-    ),
-    # g/eg are donated so the update scan writes the graph buffers in place
-    # (backends that support donation) instead of copying capacity-sized
-    # arrays every epoch — the engine owns its graph state (see __init__)
-    # and always replaces it with the returned g'/eg'
-    donate_argnames=("acc", "g", "eg"),
-)
-def epoch_step(
-    g: Graph,
-    eg: EllGraph,
-    batch: UpdateBatch,
-    keys: Array,  # [Q] typed PRNG keys, one stream per query
-    us: Array,  # int32 [Q]
-    acc: Array,  # f32 [Q, n] donated accumulator
-    *,
-    n_r: int,
-    lanes_q: int,
-    max_len: int,
-    sqrt_c: float,
-    eps_p: float,
-    eps_t: float,
-    truncation_shift: bool,
-    use_kernel: bool,
-    top_k: int,
-):
-    """One fused epoch: apply the update batch, then serve the query batch.
-
-    Everything happens inside one compiled step on device — the query probe
-    reads the graph buffers the update scan just wrote, with no host
-    round-trip in between.  Returns ``(g', eg', applied, est, idx, vals)``
-    (``idx``/``vals`` are None when ``top_k == 0``); ``g'.version`` /
-    ``g'.overflow`` carry the snapshot id and capacity signal.
-    """
-    g2, eg2, applied = apply_update_batch(g, eg, batch)
-    acc, est, idx, vals = fused_serve_impl(
-        keys, g2, eg2, us, acc,
-        n_r=n_r,
-        lanes_q=lanes_q,
-        max_len=max_len,
-        sqrt_c=sqrt_c,
-        eps_p=eps_p,
-        eps_t=eps_t,
-        truncation_shift=truncation_shift,
-        use_kernel=use_kernel,
-        top_k=top_k,
-    )
-    return g2, eg2, applied, est, idx, vals
-
-
-@dataclass
-class EpochResult:
-    """Outcome of one fused update→query epoch."""
-
-    version: int  # graph snapshot id AFTER the update batch
-    overflow: bool  # sticky capacity signal (pre-regrow value)
-    regrown: bool  # True if auto_regrow ran after this epoch
-    updates_submitted: int  # live (non-padding) ops in the batch
-    updates_applied: int  # ops that changed the graph
-    updates_requeued: int  # overflow-skipped inserts pushed back for retry
-    # overflow-skipped inserts this epoch, as (src, dst, True) tuples.  With
-    # auto_regrow they are also re-queued (updates_requeued); without, the
-    # caller regrows manually and re-submits these — never silently lost
-    skipped_ops: list[tuple[int, int, bool]] = field(default_factory=list)
-    results: list[QueryResult] = field(default_factory=list)
-    latency_s: float = 0.0
+__all__ = ["DynamicEngine", "DynamicStats", "EpochResult", "epoch_step"]
 
 
 @dataclass
 class DynamicStats:
+    """Legacy stats view (superseded by ``repro.api.EngineStats``)."""
+
     epochs: int = 0
     queries: int = 0
     updates_applied: int = 0
@@ -162,26 +44,12 @@ class DynamicStats:
 
 
 class DynamicEngine:
-    """Single-host engine interleaving edge updates and queries per epoch.
+    """Deprecated shim — use :class:`repro.api.SimRankSession.epoch`.
 
-    ``update_batch`` is the fixed op-batch width of the epoch step (short
-    batches are sentinel-padded), ``batch_q`` the fixed query width (padded
-    with repeats), ``walk_chunk`` the total lane-column width shared by the
-    query batch — one compiled epoch per configuration.
-
-    With ``auto_regrow`` (default), a capacity overflow triggers host-side
-    compaction into 2x buffers after the epoch and re-queues the skipped
-    inserts at the front, so no update is ever lost; the epoch that hit the
-    limit still served its queries on the partially-updated snapshot (its
-    ``EpochResult.overflow`` says so).  With ``auto_regrow=False`` the
-    skipped inserts are surfaced in ``EpochResult.skipped_ops`` instead —
-    the caller regrows (``graph.dynamic.regrow`` on ``self.g``/``self.eg``)
-    and re-submits them; either way nothing is silently dropped.
-
-    The engine OWNS its graph state: ``g``/``eg`` are copied at
-    construction and the epoch step donates the copies, so graph buffers
-    update in place on backends with donation while the caller's arrays
-    stay valid.
+    Same constructor and methods as the PR-2 engine; every call delegates
+    to a session constructed over ``GraphHandle(g=g, eg=eg)`` (own-copied;
+    the epoch step donates the session's buffers, the caller's arrays stay
+    valid).
     """
 
     def __init__(
@@ -200,207 +68,155 @@ class DynamicEngine:
         auto_regrow: bool = True,
         use_kernel: bool = False,
     ):
-        if top_k < 1:
-            # step() builds top-k QueryResults; the top_k == 0 (full
-            # estimate vector) mode of epoch_step has no result shape here
-            raise ValueError("DynamicEngine requires top_k >= 1")
-        if g.version is None:
-            g = g.replace(
-                version=jnp.asarray(0, jnp.int32), overflow=jnp.asarray(False)
-            )
-        if eg.version is None:
-            eg = eg.replace(
-                version=jnp.asarray(0, jnp.int32), overflow=jnp.asarray(False)
-            )
-        # own-copy the graph state: epoch_step donates g/eg, so the engine
-        # must hold buffers nobody else references (a one-time O(graph)
-        # copy; the caller's arrays stay valid)
-        self.g = jax.tree.map(lambda a: jnp.array(a, copy=True), g)
-        self.eg = jax.tree.map(lambda a: jnp.array(a, copy=True), eg)
-        self.params: ProbeSimParams = make_params(
-            g.n, c=c, eps_a=eps_a, delta=delta
+        warnings.warn(
+            "DynamicEngine is deprecated; use repro.api.SimRankSession.epoch "
+            "over a GraphHandle (see docs/api.md)",
+            DeprecationWarning,
+            stacklevel=2,
         )
-        self.walk_chunk = walk_chunk
-        self.top_k = top_k
-        self.batch_q = batch_q
-        self.update_batch = update_batch
-        self.auto_regrow = auto_regrow
-        self.use_kernel = use_kernel
-        self.key = jax.random.key(seed)
-        self.update_queue: deque[tuple[int, int, bool]] = deque()
-        self.query_queue: deque[tuple[int, Array]] = deque()
-        self.stats = DynamicStats()
-        self._seq = 0  # submission counter -> per-query PRNG stream
+        if top_k < 1:
+            # legacy contract: this engine always built top-k results
+            raise ValueError("DynamicEngine requires top_k >= 1")
+        self._session = SimRankSession(
+            GraphHandle(g=g, eg=eg),
+            c=c, eps_a=eps_a, delta=delta, walk_chunk=walk_chunk,
+            top_k=top_k, seed=seed, batch_q=batch_q,
+            update_batch=update_batch, auto_regrow=auto_regrow,
+            use_kernel=use_kernel,
+        )
+        self._stats = DynamicStats()  # ONE live object (legacy contract)
 
-    # -- enqueue ------------------------------------------------------------
+    # -- delegated state -----------------------------------------------------
 
-    def _enqueue(self, src, dst, insert: bool) -> None:
-        src = np.asarray(src).reshape(-1)
-        dst = np.asarray(dst).reshape(-1)
-        # validate HERE: out-of-range ids would be sentinel-masked to no-ops
-        # downstream and then mistaken for capacity-overflow skips, feeding
-        # an unbounded requeue/regrow loop
-        n = self.g.n
-        bad = (src < 0) | (src >= n) | (dst < 0) | (dst >= n)
-        if bad.any():
-            i = int(np.argmax(bad))
-            raise ValueError(
-                f"edge op ({src[i]}, {dst[i]}) out of range for n={n}"
-            )
-        for s, d in zip(src, dst):
-            self.update_queue.append((int(s), int(d), insert))
+    @property
+    def session(self) -> SimRankSession:
+        """The underlying session (migration escape hatch)."""
+        return self._session
 
-    def insert(self, src, dst) -> None:
-        """Enqueue edge insertions (applied by the next epoch step(s))."""
-        self._enqueue(src, dst, True)
+    @property
+    def g(self) -> Graph:
+        return self._session.handle.g
 
-    def delete(self, src, dst) -> None:
-        """Enqueue edge deletions."""
-        self._enqueue(src, dst, False)
+    @g.setter
+    def g(self, value: Graph) -> None:
+        # own-copy + validate: epoch_step donates the session's buffers, so
+        # they must never be shared with the caller (legacy contract: the
+        # caller's arrays stay valid)
+        self._session.handle.set_mirrors(g=value)
 
-    def _query_key(self) -> Array:
-        k = jax.random.fold_in(self.key, self._seq)
-        self._seq += 1
-        return k
+    @property
+    def eg(self) -> EllGraph:
+        return self._session.handle.eg
 
-    def submit(self, node: int) -> None:
-        """Enqueue a top-k query (PRNG stream fixed NOW: batch-invariant)."""
-        self.query_queue.append((int(node), self._query_key()))
+    @eg.setter
+    def eg(self, value: EllGraph) -> None:
+        self._session.handle.set_mirrors(eg=value)
 
-    # -- state --------------------------------------------------------------
+    @property
+    def params(self):
+        return self._session.params
+
+    # legacy engines exposed these as plain mutable attributes
+    @property
+    def update_batch(self) -> int:
+        return self._session.update_batch
+
+    @update_batch.setter
+    def update_batch(self, value: int) -> None:
+        self._session.update_batch = int(value)
+
+    @property
+    def batch_q(self) -> int:
+        return self._session.batch_q
+
+    @batch_q.setter
+    def batch_q(self, value: int) -> None:
+        self._session.batch_q = int(value)
+
+    @property
+    def walk_chunk(self) -> int:
+        return self._session.walk_chunk
+
+    @walk_chunk.setter
+    def walk_chunk(self, value: int) -> None:
+        self._session.walk_chunk = int(value)
+
+    @property
+    def top_k(self) -> int:
+        return self._session.top_k
+
+    @top_k.setter
+    def top_k(self, value: int) -> None:
+        self._session.top_k = int(value)
+
+    @property
+    def auto_regrow(self) -> bool:
+        return self._session.auto_regrow
+
+    @auto_regrow.setter
+    def auto_regrow(self, value: bool) -> None:
+        self._session.auto_regrow = bool(value)
+
+    @property
+    def use_kernel(self) -> bool:
+        return self._session.use_kernel
+
+    @use_kernel.setter
+    def use_kernel(self, value: bool) -> None:
+        self._session.use_kernel = bool(value)
+
+    def _refresh_stats(self) -> None:
+        s = self._session.stats
+        self._stats.epochs = s.epochs
+        self._stats.queries = s.queries
+        self._stats.updates_applied = s.updates
+        self._stats.regrows = s.regrows
+
+    @property
+    def stats(self) -> DynamicStats:
+        # one persistent object, refreshed from the session counters — a
+        # reference held across step()/drain() stays current, as with the
+        # pre-session engine's mutable stats field
+        self._refresh_stats()
+        return self._stats
 
     @property
     def version(self) -> int:
-        return int(self.eg.version)
+        return self._session.version
 
     @property
     def overflow(self) -> bool:
-        return bool(self.g.overflow)
+        return self._session.overflow
 
     @property
     def pending(self) -> tuple[int, int]:
         """(queued updates, queued queries)."""
-        return len(self.update_queue), len(self.query_queue)
+        return self._session.pending
 
-    # -- the epoch loop -----------------------------------------------------
+    # -- enqueue -------------------------------------------------------------
 
-    def _pop_updates(self) -> tuple[list[tuple[int, int, bool]], UpdateBatch]:
-        # apply_update_batch runs its delete phase before its insert phase
-        # and deletes at most one copy of a (s, d) pair per batch, so a batch
-        # must not contain (a) a delete of an edge inserted earlier in the
-        # SAME batch, nor (b) a second delete of the same pair (multigraph
-        # copies) — cut the epoch's batch there (the delete waits for the
-        # next epoch) to preserve exact stream order
-        ops: list[tuple[int, int, bool]] = []
-        inserted: set[tuple[int, int]] = set()
-        deleted: set[tuple[int, int]] = set()
-        while self.update_queue and len(ops) < self.update_batch:
-            s, d, ins = self.update_queue[0]
-            if not ins and ((s, d) in inserted or (s, d) in deleted):
-                break
-            (inserted if ins else deleted).add((s, d))
-            ops.append(self.update_queue.popleft())
-        batch = make_update_batch(
-            [s for s, _, _ in ops],
-            [d for _, d, _ in ops],
-            [i for _, _, i in ops] if ops else True,
-            batch_size=self.update_batch,
-            n=self.g.n,
-        )
-        return ops, batch
+    def insert(self, src, dst) -> None:
+        """Enqueue edge insertions (applied by the next epoch step(s))."""
+        self._session.queue_update(src, dst, insert=True)
 
-    def _pop_queries(self) -> tuple[int, list[tuple[int, Array]]]:
-        live = min(self.batch_q, len(self.query_queue))
-        qs = [self.query_queue.popleft() for _ in range(live)]
-        while len(qs) < self.batch_q:
-            # repeat-pad (recomputes a served query; results discarded) —
-            # node 0 with a throwaway stream when the queue was empty
-            qs.append(qs[-1] if qs else (0, self._query_key()))
-        return live, qs
+    def delete(self, src, dst) -> None:
+        """Enqueue edge deletions."""
+        self._session.queue_update(src, dst, insert=False)
+
+    def submit(self, node: int) -> None:
+        """Enqueue a top-k query (PRNG stream fixed NOW: batch-invariant)."""
+        self._session.submit(int(node))
+
+    # -- the epoch loop ------------------------------------------------------
 
     def step(self, *, budget_walks: int | None = None) -> EpochResult:
-        """Run ONE fused epoch: up to ``update_batch`` queued ops + up to
-        ``batch_q`` queued queries in a single compiled dispatch.
-
-        Update-only epochs (empty query queue) dispatch just the batch
-        application — no point paying the fused probe for discarded dummy
-        queries."""
-        ops, batch = self._pop_updates()
-        n_r = budget_walks or self.params.n_r
-        p = self.params
-
-        t0 = time.time()
-        if self.query_queue:
-            live_q, qs = self._pop_queries()
-            us = jnp.asarray([u for u, _ in qs], jnp.int32)
-            keys = jnp.stack([k for _, k in qs])
-            acc = jnp.zeros((self.batch_q, self.g.n), jnp.float32)
-            g2, eg2, applied, _, idx, vals = epoch_step(
-                self.g, self.eg, batch, keys, us, acc,
-                n_r=n_r,
-                lanes_q=max(1, self.walk_chunk // self.batch_q),
-                max_len=p.max_len,
-                sqrt_c=p.sqrt_c,
-                eps_p=p.eps_p,
-                eps_t=p.eps_t,
-                truncation_shift=p.truncation_shift,
-                use_kernel=self.use_kernel,
-                top_k=self.top_k,
-            )
-            idx = np.asarray(idx)  # device sync (also materializes g2/eg2)
-            vals = np.asarray(vals)
-        else:
-            live_q, qs = 0, []
-            g2, eg2, applied = apply_update_batch_jit(self.g, self.eg, batch)
-        applied = np.asarray(applied)[: len(ops)]
-        dt = time.time() - t0
-        self.g, self.eg = g2, eg2
-
-        version = self.version
-        overflow = self.overflow
-        regrown = False
-        requeued = 0
-        # skipped inserts (applied == False); unapplied deletes were
-        # genuinely absent — those are not retried or surfaced
-        skipped = [op for op, ok in zip(ops, applied) if not ok and op[2]]
-        if skipped and self.auto_regrow:
-            # retry on the regrown buffers next epoch
-            for op in reversed(skipped):
-                self.update_queue.appendleft(op)
-            requeued = len(skipped)
-            self.g, self.eg = regrow(self.g, self.eg)
-            self.stats.regrows += 1
-            regrown = True
-
-        results = [
-            QueryResult(
-                node=u,
-                topk_nodes=idx[i],
-                topk_scores=vals[i],
-                walks_used=n_r,
-                latency_s=dt,
-                version=version,
-            )
-            for i, (u, _) in enumerate(qs[:live_q])
-        ]
-        self.stats.epochs += 1
-        self.stats.queries += live_q
-        self.stats.updates_applied += int(applied.sum())
-        return EpochResult(
-            version=version,
-            overflow=overflow,
-            regrown=regrown,
-            updates_submitted=len(ops),
-            updates_applied=int(applied.sum()),
-            updates_requeued=requeued,
-            skipped_ops=skipped,
-            results=results,
-            latency_s=dt,
-        )
+        """Run ONE fused update->query epoch (see ``SimRankSession.epoch``)."""
+        ep = self._session.epoch(budget_walks=budget_walks)
+        self._refresh_stats()
+        return ep
 
     def drain(self, *, budget_walks: int | None = None) -> list[EpochResult]:
         """Run epochs until both queues are empty."""
-        out: list[EpochResult] = []
-        while self.update_queue or self.query_queue:
-            out.append(self.step(budget_walks=budget_walks))
+        out = self._session.drain_epochs(budget_walks=budget_walks)
+        self._refresh_stats()
         return out

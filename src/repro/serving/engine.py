@@ -1,84 +1,64 @@
-"""SimRank query serving engine — the paper's end-to-end deployment story.
+"""DEPRECATED: ``SimRankEngine`` is a thin shim over ``repro.api``.
 
-Index-free means the engine holds only the (dynamic) graph; queries run
-against whatever the graph is *now*:
+The session API (``GraphHandle`` + ``QuerySpec`` -> ``SimRankSession``)
+unifies this engine, the dynamic epoch engine and the five legacy query
+signatures behind one surface — see docs/api.md.  This module remains so
+existing callers keep working; it delegates every operation to an owned
+``SimRankSession`` and is bit-identical to the pre-session engine under the
+same PRNG seed (the session's drain path preserves the submit-time stream
+assignment, fixed-size repeat-padded batches and the fused dispatch
+exactly — asserted by tests/test_session_api.py).
 
-* dynamic batching: queued queries are dispatched in fixed-size batches of
-  ``batch_q`` (padding with repeats) through the fused multi-query serve
-  step (``core.multisource``), so jit compiles ONE shape per batch size and
-  every push level is shared by the whole batch across the lane dimension;
-* interleaved updates: edge insert/delete ops are applied between batches
-  through the coordinated both-mirrors path (graph/dynamic.py) — O(1)
-  buffer writes, never an index rebuild; skipped-for-capacity inserts are
-  surfaced via ``overflow`` (see serving/dynamic_engine.py for the engine
-  that fuses updates INTO the serve step and auto-regrows);
-* versioned snapshots: every result carries the graph ``version`` it was
-  computed against;
-* anytime serving: ``budget_walks`` caps the walk pool per query (Thm 1
-  still bounds the error at the reduced n_r);
-* straggler mitigation: serving.straggler wraps step dispatch with a
-  deadline + retry-on-replica policy (queries are pure functions: idempotent
-  re-execution is safe).
+Migration:
 
-Randomness: every submitted query is assigned its own PRNG stream (derived
-from the engine seed and the submission sequence number) at submit time, so
-batched ``drain()`` results are identical to serving the same queries one at
-a time — batch composition never changes a query's answer.
-
-Batched usage::
-
-    eng = SimRankEngine(g, eg, top_k=10, batch_q=8)
-    for u in query_nodes:
-        eng.submit(u)
-    for res in eng.drain(budget_walks=512):   # fused: 8 queries per dispatch
-        print(res.node, res.topk_nodes)
-
-The multi-pod variant swaps the local fused step for
-``core.distributed.make_serve_step`` (same loop structure); see
-launch/serve.py.
+    eng = SimRankEngine(g, eg, top_k=10, batch_q=8)      # old
+    sess = SimRankSession(GraphHandle(g=g, eg=eg),       # new
+                          top_k=10, batch_q=8)
+    sess.submit(u); sess.drain(budget_walks=512)
 """
 from __future__ import annotations
 
-import time
-from collections import deque
-from dataclasses import dataclass
+import warnings
 
 import numpy as np
 
-import jax
-import jax.numpy as jnp
-
-from repro.core.multisource import multi_source_topk
-from repro.core.params import ProbeSimParams, make_params
-from repro.graph.dynamic import apply_update_batch_jit, make_update_batch
+from repro.api.handle import GraphHandle
+from repro.api.session import EngineStats, SimRankSession
+from repro.api.spec import QuerySpec, ResultEnvelope
 from repro.graph.structs import EllGraph, Graph
 
+def QueryResult(
+    node=None,
+    topk_nodes=None,
+    topk_scores=None,
+    walks_used=0,
+    latency_s=0.0,
+    version=-1,
+    **kwargs,
+) -> ResultEnvelope:
+    """Legacy constructor shim: the OLD positional field order, returning a
+    ``ResultEnvelope`` (its field-superset).  Kept as a function rather than
+    an alias so pre-session positional construction keeps binding the right
+    fields; isinstance checks should use ``ResultEnvelope``.
+    """
+    return ResultEnvelope(
+        kind="topk", node=node, topk_nodes=topk_nodes,
+        topk_scores=topk_scores, walks_used=walks_used,
+        latency_s=latency_s, version=version, **kwargs,
+    )
 
-@dataclass
-class QueryResult:
-    node: int
-    topk_nodes: np.ndarray
-    topk_scores: np.ndarray
-    walks_used: int
-    latency_s: float
-    version: int = -1  # graph snapshot the scores are attributed to
 
-
-@dataclass
-class EngineStats:
-    queries: int = 0
-    updates: int = 0
-    steps: int = 0
-    retries: int = 0
+__all__ = ["SimRankEngine", "QueryResult", "EngineStats"]
 
 
 class SimRankEngine:
-    """Single-host engine over the in-memory dynamic graph.
+    """Deprecated shim — use :class:`repro.api.SimRankSession`.
 
-    ``walk_chunk`` is the total lane-column width of the fused serve step
-    (shared by the whole batch); ``batch_q`` is the fixed query batch size
-    used by ``drain()`` — short batches are padded with repeats so the
-    compiled step is cached per shape.
+    Same constructor and methods as the PR-2 engine; every call delegates
+    to a session constructed over ``GraphHandle(g=g, eg=eg)`` (own-copied;
+    the caller's arrays stay valid).  ``auto_regrow=False`` preserves the
+    legacy behavior of surfacing capacity overflow via the sticky
+    ``overflow`` flag instead of regrowing.
     """
 
     def __init__(
@@ -94,133 +74,109 @@ class SimRankEngine:
         seed: int = 0,
         batch_q: int = 8,
     ):
-        self.g = g
-        self.eg = eg
-        self.params: ProbeSimParams = make_params(
-            g.n, c=c, eps_a=eps_a, delta=delta
+        warnings.warn(
+            "SimRankEngine is deprecated; use repro.api.SimRankSession over "
+            "a GraphHandle (see docs/api.md)",
+            DeprecationWarning,
+            stacklevel=2,
         )
-        self.walk_chunk = walk_chunk
-        self.top_k = top_k
-        self.batch_q = batch_q
-        self.key = jax.random.key(seed)
-        self.queue: deque[tuple[int, jax.Array]] = deque()
-        self.stats = EngineStats()
-        self._seq = 0  # submission counter -> per-query PRNG stream
+        self._session = SimRankSession(
+            GraphHandle(g=g, eg=eg),
+            c=c, eps_a=eps_a, delta=delta, walk_chunk=walk_chunk,
+            top_k=top_k, seed=seed, batch_q=batch_q, auto_regrow=False,
+        )
 
-    # -- updates ------------------------------------------------------------
+    # -- delegated state -----------------------------------------------------
+
+    @property
+    def session(self) -> SimRankSession:
+        """The underlying session (migration escape hatch)."""
+        return self._session
+
+    @property
+    def g(self) -> Graph:
+        return self._session.handle.g
+
+    @g.setter
+    def g(self, value: Graph) -> None:
+        # own-copy + validate: the session may donate its buffers, so it
+        # must never share arrays with the caller (legacy contract: the
+        # caller's arrays stay valid)
+        self._session.handle.set_mirrors(g=value)
+
+    @property
+    def eg(self) -> EllGraph:
+        return self._session.handle.eg
+
+    @eg.setter
+    def eg(self, value: EllGraph) -> None:
+        self._session.handle.set_mirrors(eg=value)
+
+    @property
+    def params(self):
+        return self._session.params
+
+    @property
+    def stats(self) -> EngineStats:
+        return self._session.stats
+
+    # legacy engines exposed these as plain mutable attributes
+    @property
+    def walk_chunk(self) -> int:
+        return self._session.walk_chunk
+
+    @walk_chunk.setter
+    def walk_chunk(self, value: int) -> None:
+        self._session.walk_chunk = int(value)
+
+    @property
+    def top_k(self) -> int:
+        return self._session.top_k
+
+    @top_k.setter
+    def top_k(self, value: int) -> None:
+        self._session.top_k = int(value)
+
+    @property
+    def batch_q(self) -> int:
+        return self._session.batch_q
+
+    @batch_q.setter
+    def batch_q(self, value: int) -> None:
+        self._session.batch_q = int(value)
 
     @property
     def version(self) -> int:
-        """Current graph snapshot id (bumped once per applied update batch)."""
-        return int(self.eg.version) if self.eg.version is not None else -1
+        return self._session.version
 
     @property
     def overflow(self) -> bool:
-        """True iff an insert was ever skipped for lack of capacity.
+        return self._session.overflow
 
-        Sticky until the caller regrows (``graph.dynamic.regrow``); the
-        ``DynamicEngine`` automates that — this engine only surfaces it.
-        """
-        return bool(self.g.overflow) if self.g.overflow is not None else False
-
-    def _apply(self, src, dst, insert: bool) -> None:
-        if src.shape[0] == 0:
-            return
-        # pad to the next power of two so variable-size update bursts reuse
-        # a log-bounded set of compiled batch shapes
-        bucket = 1 << (int(src.shape[0]) - 1).bit_length()
-        batch = make_update_batch(
-            src, dst, insert, batch_size=bucket, n=self.g.n
-        )
-        self.g, self.eg, _ = apply_update_batch_jit(self.g, self.eg, batch)
-        self.stats.updates += int(src.shape[0])
+    # -- updates -------------------------------------------------------------
 
     def insert(self, src: np.ndarray, dst: np.ndarray) -> None:
         """Insert edges into BOTH mirrors atomically (skip-on-overflow)."""
-        self._apply(np.asarray(src, np.int32).reshape(-1),
-                    np.asarray(dst, np.int32).reshape(-1), True)
+        self._session.update(inserts=(src, dst))
 
     def delete(self, src: np.ndarray, dst: np.ndarray) -> None:
-        """Delete edges from BOTH mirrors atomically (absent edges: no-op).
+        """Delete edges from BOTH mirrors atomically (absent edges: no-op)."""
+        self._session.update(deletes=(src, dst))
 
-        ``apply_update_batch`` removes at most one copy of a (s, d) pair per
-        batch, so duplicate pairs in one call (multigraph copies) are split
-        into sequential unique-pair sub-batches — one copy removed per op,
-        matching the pre-batch sequential semantics.
-        """
-        src = np.asarray(src, np.int32).reshape(-1)
-        dst = np.asarray(dst, np.int32).reshape(-1)
-        if src.shape[0] == 0:
-            return
-        seen: dict[tuple[int, int], int] = {}
-        occ = np.empty(src.shape[0], np.int64)
-        for i, (s, d) in enumerate(zip(src.tolist(), dst.tolist())):
-            occ[i] = seen.get((s, d), 0)
-            seen[(s, d)] = occ[i] + 1
-        for k in range(int(occ.max()) + 1):
-            m = occ == k
-            self._apply(src[m], dst[m], False)
-
-    # -- queries ------------------------------------------------------------
-
-    def _query_key(self) -> jax.Array:
-        k = jax.random.fold_in(self.key, self._seq)
-        self._seq += 1
-        return k
+    # -- queries -------------------------------------------------------------
 
     def submit(self, node: int) -> None:
-        self.queue.append((int(node), self._query_key()))
-
-    def _serve_batch(
-        self,
-        batch: list[tuple[int, jax.Array]],
-        budget_walks: int | None,
-    ) -> list[QueryResult]:
-        """One fused dispatch for a (possibly repeat-padded) query batch."""
-        n_r = budget_walks or self.params.n_r
-        us = jnp.asarray([u for u, _ in batch], jnp.int32)
-        keys = jnp.stack([k for _, k in batch])
-        t0 = time.time()
-        idx, vals = multi_source_topk(
-            None, self.g, self.eg, us, self.top_k, self.params,
-            lanes=self.walk_chunk, n_r=n_r, keys=keys,
-        )
-        idx = np.asarray(idx)  # device sync
-        vals = np.asarray(vals)
-        dt = time.time() - t0
-        self.stats.steps += 1
-        ver = self.version
-        return [
-            QueryResult(
-                node=u,
-                topk_nodes=idx[i],
-                topk_scores=vals[i],
-                walks_used=n_r,
-                latency_s=dt,
-                version=ver,
-            )
-            for i, (u, _) in enumerate(batch)
-        ]
+        self._session.submit(int(node))
 
     def run_query(self, u: int, *, budget_walks: int | None = None) -> QueryResult:
         """Serve one query now (Q = 1 fused step), bypassing the queue."""
-        res = self._serve_batch([(int(u), self._query_key())], budget_walks)[0]
-        self.stats.queries += 1
+        sess = self._session
+        spec = QuerySpec(kind="topk", node=int(u), k=sess.top_k,
+                         variant="telescoped")
+        res = sess._serve_fused([(spec, sess._query_key())], budget_walks)[0]
+        sess.stats.queries += 1
         return res
 
     def drain(self, *, budget_walks: int | None = None) -> list[QueryResult]:
-        """Serve every queued query in fused batches of ``batch_q``.
-
-        Short final batches are padded by repeating the last entry (the
-        padded slots recompute an already-served query and are discarded),
-        so every dispatch reuses the same compiled step.
-        """
-        out: list[QueryResult] = []
-        while self.queue:
-            live = min(self.batch_q, len(self.queue))
-            batch = [self.queue.popleft() for _ in range(live)]
-            while len(batch) < self.batch_q:
-                batch.append(batch[-1])  # pad with repeats: static shape
-            out.extend(self._serve_batch(batch, budget_walks)[:live])
-            self.stats.queries += live
-        return out
+        """Serve every queued query in fused batches of ``batch_q``."""
+        return self._session.drain(budget_walks=budget_walks)

@@ -1,0 +1,103 @@
+"""Public-surface lint: diff the importable API against the committed manifest.
+
+Imports every public module, collects its ``__all__``, and compares the
+``module:name`` set against ``docs/api_manifest.txt``.  CI runs this next
+to the README snippet check, so an accidental rename/removal of a public
+symbol (or an accidental new export nobody documented) fails the build
+instead of silently breaking downstream callers.
+
+Usage:
+  PYTHONPATH=src python tools/check_api.py            # diff (CI mode)
+  PYTHONPATH=src python tools/check_api.py --write    # regenerate manifest
+
+Intentional surface changes: update the code, run ``--write``, commit the
+manifest diff alongside (and update docs/api.md).
+"""
+from __future__ import annotations
+
+import importlib
+import os
+import sys
+
+# every module whose __all__ is public contract
+MODULES = [
+    "repro.api",
+    "repro.core",
+    "repro.graph",
+    "repro.serving",
+]
+
+MANIFEST = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "docs",
+    "api_manifest.txt",
+)
+
+
+def current_surface() -> set[str]:
+    surface: set[str] = set()
+    for modname in MODULES:
+        mod = importlib.import_module(modname)
+        names = getattr(mod, "__all__", None)
+        if names is None:
+            raise SystemExit(f"{modname}: public module must define __all__")
+        for name in names:
+            if not hasattr(mod, name):
+                raise SystemExit(f"{modname}.__all__ lists missing name {name!r}")
+            surface.add(f"{modname}:{name}")
+    return surface
+
+
+def read_manifest() -> set[str]:
+    with open(MANIFEST) as f:
+        return {
+            line.strip()
+            for line in f
+            if line.strip() and not line.startswith("#")
+        }
+
+
+def main() -> int:
+    surface = current_surface()
+    if "--write" in sys.argv:
+        with open(MANIFEST, "w") as f:
+            f.write(
+                "# Public API manifest — one module:name per line.\n"
+                "# Regenerate with: PYTHONPATH=src python tools/check_api.py"
+                " --write\n"
+                "# CI (tools/check_api.py) fails on any diff against the"
+                " importable surface.\n"
+            )
+            for entry in sorted(surface):
+                f.write(entry + "\n")
+        print(f"wrote {len(surface)} entries to {MANIFEST}")
+        return 0
+
+    try:
+        pinned = read_manifest()
+    except FileNotFoundError:
+        print(f"missing manifest {MANIFEST}; run with --write", file=sys.stderr)
+        return 1
+    missing = sorted(pinned - surface)  # removed/renamed: breaking
+    unexpected = sorted(surface - pinned)  # undocumented new exports
+    for name in missing:
+        print(f"MISSING (in manifest, not importable): {name}", file=sys.stderr)
+    for name in unexpected:
+        print(f"UNEXPECTED (importable, not in manifest): {name}",
+              file=sys.stderr)
+    if missing or unexpected:
+        print(
+            f"\npublic surface drifted ({len(missing)} missing, "
+            f"{len(unexpected)} unexpected).  If intentional: "
+            f"PYTHONPATH=src python tools/check_api.py --write "
+            f"and commit the manifest (+ docs/api.md).",
+            file=sys.stderr,
+        )
+        return 1
+    print(f"api surface OK: {len(surface)} symbols across "
+          f"{len(MODULES)} modules match {os.path.basename(MANIFEST)}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
