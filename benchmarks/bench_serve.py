@@ -68,7 +68,11 @@ def _seed_serial_query(key, g, eg, params, u, *, budget, walk_chunk, top_k):
     return np.asarray(idx), np.asarray(vals)
 
 
-def run(quick: bool = True) -> dict:
+def run(quick: bool = True, backend: str = "local") -> dict:
+    """``backend='local'`` (default) is the serial-vs-fused protocol;
+    ``'sharded'`` additionally times the mesh-sharded drain on the local
+    device set and exports a ``backend`` comparison row (CI runs this
+    under ``XLA_FLAGS=--xla_force_host_platform_device_count=8``)."""
     name, scale = ("livejournal", 0.004)  # bench_large quick config
     budget = 512 if quick else 2048
     src, dst, n = paper_dataset(name, scale=scale)
@@ -79,18 +83,25 @@ def run(quick: bool = True) -> dict:
     key = jax.random.key(0)
 
     # --- serial: the seed algorithm, one query at a time -------------------
-    # warm the compile caches on one query, then time the full batch
-    _seed_serial_query(key, handle.g, handle.eg, params, int(queries[0]),
-                       budget=budget, walk_chunk=SEED_WALK_CHUNK, top_k=TOP_K)
-    t0 = time.time()
-    serial_results = [
-        _seed_serial_query(jax.random.fold_in(key, i), handle.g, handle.eg,
-                           params, int(u), budget=budget,
-                           walk_chunk=SEED_WALK_CHUNK, top_k=TOP_K)
-        for i, u in enumerate(queries)
-    ]
-    t_serial = time.time() - t0
-    qps_serial = Q / t_serial
+    # (skipped in the sharded-comparison mode: the backend row compares the
+    # fused local drain against the mesh drain, and the serial leg is by
+    # far the slowest part of the suite)
+    if backend == "local":
+        # warm the compile caches on one query, then time the full batch
+        _seed_serial_query(key, handle.g, handle.eg, params, int(queries[0]),
+                           budget=budget, walk_chunk=SEED_WALK_CHUNK,
+                           top_k=TOP_K)
+        t0 = time.time()
+        serial_results = [
+            _seed_serial_query(jax.random.fold_in(key, i), handle.g,
+                               handle.eg, params, int(u), budget=budget,
+                               walk_chunk=SEED_WALK_CHUNK, top_k=TOP_K)
+            for i, u in enumerate(queries)
+        ]
+        t_serial = time.time() - t0
+        qps_serial = Q / t_serial
+    else:
+        serial_results, t_serial, qps_serial = None, None, None
 
     # --- fused: batched session drain through the multi-query serve step ---
     sess = SimRankSession(handle, c=C, eps_a=0.1, walk_chunk=SEED_WALK_CHUNK,
@@ -104,22 +115,24 @@ def run(quick: bool = True) -> dict:
     fused_results = sess.drain(budget_walks=budget)
     t_fused = time.time() - t0
     qps_fused = Q / t_fused
-    speedup = qps_fused / qps_serial
+    speedup = None if qps_serial is None else qps_fused / qps_serial
 
     # sanity: both paths rank the same strong neighbors (estimates are
     # independent Monte-Carlo draws, so compare top-sets loosely)
-    overlap = np.mean([
+    overlap = None if serial_results is None else np.mean([
         len(set(serial_results[i][0][:10]) & set(fused_results[i].topk_nodes[:10])) / 10
         for i in range(Q)
     ])
 
     stats = sess.stats.as_dict()
-    emit(f"serve/{name}/serial_drain_q{Q}", t_serial / Q * 1e6,
-         f"qps={qps_serial:.3f};budget={budget}")
+    if qps_serial is not None:
+        emit(f"serve/{name}/serial_drain_q{Q}", t_serial / Q * 1e6,
+             f"qps={qps_serial:.3f};budget={budget}")
     emit(f"serve/{name}/fused_drain_q{Q}", t_fused / Q * 1e6,
-         f"qps={qps_fused:.3f};budget={budget};speedup={speedup:.2f}x;"
-         f"top10_overlap={overlap:.2f};"
-         f"steps={stats['steps']};queries_per_step="
+         f"qps={qps_fused:.3f};budget={budget};"
+         + (f"speedup={speedup:.2f}x;top10_overlap={overlap:.2f};"
+            if speedup is not None else "")
+         + f"steps={stats['steps']};queries_per_step="
          f"{stats['queries'] / max(stats['steps'], 1):.1f}")
     RESULTS["serve"] = dict(
         dataset=name,
@@ -133,20 +146,84 @@ def run(quick: bool = True) -> dict:
         serial_qps=qps_serial,
         fused_qps=qps_fused,
         speedup=speedup,
-        serial_s_per_query=t_serial / Q,
+        serial_s_per_query=None if t_serial is None else t_serial / Q,
         fused_s_per_query=t_fused / Q,
-        top10_overlap=float(overlap),
+        top10_overlap=None if overlap is None else float(overlap),
         # per-step dispatch accounting from the session (2 drains: warmup +
         # timed), so the artifact records how many queries each compiled
         # dispatch amortized, alongside the qps it bought
         session_stats=stats,
         error_bound_at_budget=float(sess.error_bound(budget)),
     )
+    if backend == "sharded":
+        RESULTS["serve"]["backend"] = _run_sharded_leg(
+            handle, queries, budget, qps_fused, fused_results
+        )
     return RESULTS["serve"]
 
 
+def _run_sharded_leg(handle, queries, budget, qps_fused, fused_results) -> dict:
+    """Time the mesh-sharded drain on the same graph/queries and emit the
+    backend comparison row.
+
+    The sharded serve config is sized for the CPU smoke mesh (one batch of
+    8 queries, narrow walk-chunks, a reduced walk budget) — the row
+    demonstrates the sharded path serving the same workload end-to-end
+    and records its qps next to the fused local number; it is an
+    integration datapoint, not a same-silicon fairness claim (8 fake
+    host devices share one CPU, and the simulated collectives dominate).
+    """
+    shards = len(jax.devices())
+    q_sh = min(8, Q)
+    budget_sh = min(budget, 256)
+    sub = [int(u) for u in queries[:q_sh]]
+    sess = SimRankSession(
+        handle, c=C, eps_a=0.1, walk_chunk=64, top_k=TOP_K, batch_q=q_sh,
+        seed=0, backend="sharded", shards=shards,
+    )
+    for u in sub:  # warm-up drain compiles the chunk steps
+        sess.submit(u)
+    sess.drain(budget_walks=budget_sh)
+    for u in sub:
+        sess.submit(u)
+    t0 = time.time()
+    results = sess.drain(budget_walks=budget_sh)
+    t_sharded = time.time() - t0
+    qps_sharded = q_sh / t_sharded
+    overlap = np.mean([
+        len(set(results[i].topk_nodes[:10].tolist())
+            & set(fused_results[i].topk_nodes[:10].tolist())) / 10
+        for i in range(q_sh)
+    ])
+    emit(f"serve/{RESULTS['serve']['dataset']}/sharded_drain_q{q_sh}",
+         t_sharded / q_sh * 1e6,
+         f"qps={qps_sharded:.3f};shards={shards};budget={budget_sh};"
+         f"top10_overlap_vs_fused={overlap:.2f}")
+    return dict(
+        backend="sharded",
+        shards=int(shards),
+        probe="spmd",
+        queries=q_sh,
+        budget_walks=int(budget_sh),
+        walk_chunk=64,
+        batch_q=q_sh,
+        sharded_qps=float(qps_sharded),
+        sharded_s_per_query=float(t_sharded / q_sh),
+        local_fused_qps=float(qps_fused),
+        top10_overlap_vs_fused=float(overlap),
+        session_stats=sess.stats.as_dict(),
+    )
+
+
 if __name__ == "__main__":
+    import argparse
+
     from benchmarks.common import write_json
 
-    run(quick=True)
-    write_json("BENCH_serve.json", quick=True, suites=["serve"])
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--backend", choices=("local", "sharded"),
+                    default="local")
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    run(quick=not args.full, backend=args.backend)
+    write_json("BENCH_serve.json", quick=not args.full, suites=["serve"])

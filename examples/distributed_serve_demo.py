@@ -25,8 +25,9 @@ from repro.graph import powerlaw_graph
 
 
 def main():
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.utils.jaxcompat import make_mesh, set_mesh, specs_to_shardings
+
+    mesh = make_mesh((2, 4), ("data", "model"))
     src, dst, n = powerlaw_graph(20_000, 200_000, seed=0)
     cfg = ProbeSimConfig(name="demo", n=n, m=len(src), c=0.6)
     Q, B, L, K = 4, 64, 8, 10
@@ -36,16 +37,18 @@ def main():
     sg = build_sharded_graph(src, dst, n, pad_nodes=32, pad_edges=256)
     rg = build_ring_graph(src, dst, n, shards=4)
 
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         auto = jax.jit(
             make_serve_step(cfg, queries=Q, walk_chunk=B, max_len=L, top_k=K,
                             edge_chunks=4),
-            in_shardings=(graph_specs(sg), P(), P()),
+            in_shardings=specs_to_shardings(
+                (graph_specs(sg), P(), P()), mesh=mesh),
         )
         ring = jax.jit(
             make_ring_serve_step(cfg, queries=Q, walk_chunk=B, max_len=L,
                                  top_k=K, frontier_dtype=jnp.bfloat16),
-            in_shardings=(ring_graph_specs(rg), P(), P()),
+            in_shardings=specs_to_shardings(
+                (ring_graph_specs(rg), P(), P()), mesh=mesh),
         )
 
         for name, fn, g in [("auto-partitioned", auto, sg),

@@ -76,6 +76,22 @@ def main():
     assert all(res.version == 1 for res in ep.results)
     print(f"session stats: {dsess.stats}")
 
+    # --- pluggable backends: the same surface, mesh-sharded ---------------
+    # backend="sharded" places a dst-partitioned copy of the graph over a
+    # local device mesh (shards=N row blocks; 1 here — CPU CI has one
+    # device, a real deployment passes shards=N or an explicit mesh=).
+    # submit() returns a QueryTicket on every backend: poll()/result()
+    # for async consumption, drain() stays the synchronous collect-all.
+    ssess = SimRankSession(handle, c=0.25, eps_a=0.05, top_k=3, seed=0,
+                           backend="sharded", shards=1)
+    ticket = ssess.submit(0)
+    env = ticket.result(budget_walks=2048)
+    print(f"sharded top-3 for 'a' ({env.variant}):",
+          [("abcdefgh"[i], round(float(s), 4))
+           for i, s in zip(env.topk_nodes, env.topk_scores)])
+    ssess.update(inserts=([5], [0]))  # shard-wise apply, no index rebuild
+    assert ssess.version == 1
+
 
 if __name__ == "__main__":
     main()

@@ -1,16 +1,27 @@
 """repro.api — the one session surface over the live graph.
 
 ``GraphHandle`` owns the coordinated COO+ELL mirror pair (construction,
-updates, regrow, snapshot metadata); ``QuerySpec`` / ``ResultEnvelope``
-are the typed request/response pair; ``SimRankSession`` is the single
-entrypoint unifying one-shot queries, queued fused serving, immediate
-updates and fused update->query epochs.  The legacy engines in
-``repro.serving`` are deprecation shims over this package.
+updates, regrow, snapshot metadata, mesh placement via ``shard()``);
+``QuerySpec`` / ``ResultEnvelope`` are the typed request/response pair;
+``SimRankSession`` is the single entrypoint unifying one-shot queries,
+queued fused serving (``submit`` -> ``QueryTicket``; ``drain``),
+immediate updates and fused update->query epochs.  Execution is
+pluggable through ``repro.api.backend``: ``LocalBackend`` (single-device
+fused path) and ``ShardedBackend`` (mesh-sharded execution) sit behind
+the same contract.  The legacy engines in ``repro.serving`` are
+deprecation shims over this package.
 """
+from repro.api.backend import (
+    Backend,
+    LocalBackend,
+    ShardedBackend,
+    ShardedGraphState,
+)
 from repro.api.handle import GraphHandle
 from repro.api.session import (
     EngineStats,
     EpochResult,
+    QueryTicket,
     SimRankSession,
     UpdateReport,
 )
@@ -26,5 +37,10 @@ __all__ = [
     "EngineStats",
     "EpochResult",
     "UpdateReport",
+    "QueryTicket",
+    "Backend",
+    "LocalBackend",
+    "ShardedBackend",
+    "ShardedGraphState",
     "abs_error_bound",
 ]

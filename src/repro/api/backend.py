@@ -1,0 +1,719 @@
+"""Execution backends under :class:`~repro.api.session.SimRankSession`.
+
+PR 3 unified the query/update surface into one session, but the session
+could only *execute* one way: the single-device fused path.  The
+distributed substrate (``core/distributed.py``'s auto-partitioned probe,
+``core/ring.py``'s shard_map ring, ``graph/partition.py``) was a dead
+island no user-facing API could reach.  This module is the bridge: a
+``Backend`` protocol the session dispatches through, with two
+implementations —
+
+* :class:`LocalBackend` — the extraction of the session's original
+  dispatch paths (``single_source``/``topk``/``multi_source*`` plus the
+  coordinated :class:`GraphHandle` update path).  Bit-identical to the
+  pre-backend session under shared keys: same core entry points, same
+  pow-2 update bucketing, same compiled shapes.
+* :class:`ShardedBackend` — the same ``QuerySpec -> ResultEnvelope``
+  contract over a device mesh: destination-partitioned edge shards
+  (:func:`repro.graph.partition.partition_edges_by_dst` bookkeeping via
+  :class:`ShardedGraphState`), the distributed walk sampler + telescoped
+  probe (``probe='spmd'``, the auto-partitioned baseline) or the
+  shard_map ring push (``probe='ring'``), and dynamic updates applied
+  shard-wise with the same version/overflow semantics as
+  ``GraphHandle.apply_batch``.
+
+The session stays the owner of everything *around* execution — specs,
+PRNG streams, queues/tickets, stats, envelopes, the §4.4 planner — and
+asks the backend only to (a) serve a batch, (b) apply an update
+sub-batch, (c) recover capacity, (d) report snapshot state.  Both
+backends batch differently behind that one surface: the local backend
+fuses queries across lane columns of one compiled step; the sharded
+backend loops ring walk-chunks over the mesh and folds partial counts on
+host.
+
+Randomness: both backends honor per-query PRNG streams.  The sharded
+backend derives chunk keys as ``fold_in(stream, chunk_index)``, so its
+answers are deterministic per (stream, graph snapshot) and independent
+of batch composition — the same contract the local path tests pin —
+but its draws are *different* draws than the local sampler's (different
+walk-table layout), so cross-backend parity is tolerance-based, not
+bit-identical (tests/test_backend.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Protocol, runtime_checkable
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.api.handle import GraphHandle
+from repro.api.spec import QuerySpec
+from repro.core.multisource import multi_source, multi_source_topk
+from repro.core.params import ProbeSimParams
+from repro.core.probesim import single_source, topk
+from repro.graph.dynamic import make_update_batch
+from repro.graph.partition import pad_to_multiple, partition_ops_by_dst
+from repro.utils.jaxcompat import make_mesh, set_mesh, specs_to_shardings
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# The protocol
+# ---------------------------------------------------------------------------
+
+
+@runtime_checkable
+class Backend(Protocol):
+    """What the session needs from an execution substrate.
+
+    Implementations own the graph state (device mirrors or sharded
+    buffers) and the compiled serve steps; the session owns specs, PRNG
+    streams, queues, stats and envelopes.  ``serve_batch`` is the one
+    required query entry point (``serve_one`` has a default route through
+    it on both shipped backends); updates arrive as homogeneous
+    sub-batches (one ``insert`` flag per call, duplicate delete pairs
+    already split by the session) and return a per-op applied mask with
+    ``GraphHandle.apply_batch`` semantics: an unapplied insert means
+    capacity overflow (sticky ``overflow``, recover via ``regrow``), an
+    unapplied delete means the edge was absent.
+    """
+
+    name: str
+    supports_epoch: bool
+    variants: tuple[str, ...]
+
+    @property
+    def n(self) -> int: ...
+
+    @property
+    def version(self) -> int: ...
+
+    @property
+    def overflow(self) -> bool: ...
+
+    def host_in_degrees(self) -> np.ndarray: ...
+
+    def dispatch_label(self, variant: str) -> str: ...
+
+    def serve_one(
+        self, spec: QuerySpec, key, *, variant: str, n_r: int
+    ) -> dict: ...
+
+    def serve_batch(
+        self, kind: str, us, keys, *, key=None, k: int = 0, n_r: int
+    ) -> tuple: ...
+
+    def apply_ops(
+        self, src: np.ndarray, dst: np.ndarray, insert: bool
+    ) -> np.ndarray: ...
+
+    def regrow(self, **kwargs) -> None: ...
+
+    def to_host_edges(self) -> tuple[np.ndarray, np.ndarray]: ...
+
+
+# ---------------------------------------------------------------------------
+# Local backend — the extracted single-device dispatch paths
+# ---------------------------------------------------------------------------
+
+
+class LocalBackend:
+    """Single-device execution over an owned :class:`GraphHandle`.
+
+    This is PR 3's session dispatch verbatim, moved behind the protocol:
+    one-shot specs delegate to the core entry points (so an explicit
+    ``spec.key`` reproduces the legacy calls bit-for-bit), batched specs
+    run the fused multi-query step, updates go through the coordinated
+    both-mirrors path with pow-2 bucketed batches.  The handle is shared
+    with the session (``session.handle is backend.handle``), which keeps
+    the fused epoch path — which donates and replaces the mirror buffers
+    in place — working unchanged.
+    """
+
+    name = "local"
+    supports_epoch = True
+    variants = ("auto", "telescoped", "tree", "reference", "randomized")
+
+    def __init__(
+        self,
+        handle: GraphHandle,
+        *,
+        params: ProbeSimParams,
+        walk_chunk: int = 256,
+        use_kernel: bool = False,
+    ):
+        if not isinstance(handle, GraphHandle):
+            raise TypeError("LocalBackend takes a GraphHandle")
+        self.handle = handle
+        self.params = params
+        self.walk_chunk = walk_chunk
+        self.use_kernel = use_kernel
+
+    # -- snapshot state ------------------------------------------------------
+
+    @property
+    def n(self) -> int:
+        return self.handle.n
+
+    @property
+    def version(self) -> int:
+        return self.handle.version
+
+    @property
+    def overflow(self) -> bool:
+        return self.handle.overflow
+
+    def host_in_degrees(self) -> np.ndarray:
+        return np.asarray(self.handle.eg.in_deg)
+
+    def dispatch_label(self, variant: str) -> str:
+        """Envelope ``variant`` field: the legacy variant, verbatim."""
+        return variant
+
+    def to_host_edges(self) -> tuple[np.ndarray, np.ndarray]:
+        return self.handle.to_host_edges()
+
+    # -- queries -------------------------------------------------------------
+
+    def serve_one(self, spec: QuerySpec, key, *, variant: str, n_r: int) -> dict:
+        """One single-node spec via the legacy entry points (bit-identical
+        to ``single_source``/``topk`` under the same key)."""
+        g, eg = self.handle.g, self.handle.eg
+        p = (
+            self.params
+            if n_r == self.params.n_r
+            else dataclasses.replace(self.params, n_r=n_r)
+        )
+        if spec.kind == "single_source":
+            est = single_source(
+                key, g, eg, spec.node, p, variant=variant,
+                walk_chunk=self.walk_chunk, use_kernel=self.use_kernel,
+            )
+            return dict(scores=np.asarray(est))
+        idx, vals = topk(
+            key, g, eg, spec.node, spec.k, p, variant=variant,
+            walk_chunk=self.walk_chunk, use_kernel=self.use_kernel,
+        )
+        return dict(topk_nodes=np.asarray(idx), topk_scores=np.asarray(vals))
+
+    def serve_batch(
+        self, kind: str, us, keys, *, key=None, k: int = 0, n_r: int
+    ) -> tuple:
+        """One fused multi-query dispatch; returns ``(est, idx, vals)``
+        (est for single_source kind, idx/vals for topk — the unused pair
+        is None).  Exactly one of ``keys`` ([Q] per-query streams) /
+        ``key`` (scalar: legacy split semantics) is set."""
+        g, eg = self.handle.g, self.handle.eg
+        us = jnp.asarray(us, jnp.int32)
+        common = dict(
+            lanes=self.walk_chunk, n_r=n_r, keys=keys,
+            use_kernel=self.use_kernel,
+        )
+        if kind == "topk":
+            idx, vals = multi_source_topk(
+                key, g, eg, us, k, self.params, **common
+            )
+            return None, np.asarray(idx), np.asarray(vals)
+        est = multi_source(key, g, eg, us, self.params, **common)
+        return np.asarray(est), None, None
+
+    # -- updates -------------------------------------------------------------
+
+    def apply_ops(
+        self, src: np.ndarray, dst: np.ndarray, insert: bool
+    ) -> np.ndarray:
+        """Apply one homogeneous sub-batch through the coordinated
+        both-mirrors path; pow-2 padded so variable-size bursts reuse a
+        log-bounded set of compiled shapes."""
+        bucket = 1 << (int(src.shape[0]) - 1).bit_length()
+        batch = make_update_batch(
+            src, dst, insert, batch_size=bucket, n=self.handle.n
+        )
+        return np.asarray(self.handle.apply_batch(batch))[: src.shape[0]]
+
+    def regrow(self, **kwargs) -> None:
+        self.handle.regrow(**kwargs)
+
+
+# ---------------------------------------------------------------------------
+# Sharded graph state — dst-partitioned host buffers + device mirrors
+# ---------------------------------------------------------------------------
+
+
+class ShardedGraphState:
+    """Destination-partitioned edge state with GraphHandle-style dynamics.
+
+    The authoritative copy is a pair of host buffers ``[S, E]`` (global
+    src/dst ids, per-shard FIFO order, ``counts[s]`` live entries each) —
+    exactly the layout :func:`partition_edges_by_dst` produces, plus
+    capacity headroom.  Updates are applied *shard-wise*: an incoming
+    batch is re-partitioned by destination shard (``dst // rows``) and
+    each shard appends/deletes in its own buffer.  Semantics mirror
+    ``GraphHandle.apply_batch``:
+
+    * an insert applies iff its shard has room; a skipped insert sets the
+      sticky ``overflow`` flag and is reported unapplied (never dropped);
+    * a delete removes at most one live copy of its (src, dst) pair per
+      *batch* — exactly ``apply_update_batch``'s contract; the session's
+      occurrence split feeds duplicate pairs in separate batches — with
+      stable compaction (FIFO order preserved) and a per-op found mask;
+    * ``version`` advances by exactly one per batch that changed the
+      graph; ``regrow`` doubles per-shard capacity, clears ``overflow``
+      and preserves ``version`` (a representation change, not a graph
+      change).
+
+    Device mirrors (:class:`~repro.core.distributed.ShardedGraph`, and a
+    :class:`~repro.core.ring.RingGraph` for the ring probe) are built
+    lazily from the host buffers and invalidated on every applied batch;
+    because partitioning is deterministic and per-shard order is FIFO,
+    the incremental mirrors are bit-identical to rebuilding from
+    :meth:`to_host_edges` — the invariant tests/test_backend.py pins.
+    """
+
+    def __init__(
+        self,
+        src: np.ndarray,
+        dst: np.ndarray,
+        n: int,
+        *,
+        shards: int,
+        capacity_per_shard: int | None = None,
+        version: int = 0,
+    ):
+        src = np.asarray(src, np.int32).reshape(-1)
+        dst = np.asarray(dst, np.int32).reshape(-1)
+        self.n = int(n)
+        self.shards = int(shards)
+        self.n_pad = pad_to_multiple(self.n, self.shards)
+        self.rows = self.n_pad // self.shards
+        shard_of = dst // self.rows
+        counts = np.bincount(shard_of, minlength=self.shards).astype(np.int64)
+        e_cap = int(capacity_per_shard or 0)
+        e_cap = max(e_cap, int(counts.max()) if len(src) else 1, 1)
+        self._src_sh = np.full((self.shards, e_cap), -1, dtype=np.int32)
+        self._dst_sh = np.full((self.shards, e_cap), -1, dtype=np.int32)
+        self._counts = counts
+        order = np.argsort(shard_of, kind="stable")  # FIFO within shard
+        src_o, dst_o = src[order], dst[order]
+        starts = np.zeros(self.shards + 1, dtype=np.int64)
+        np.cumsum(counts, out=starts[1:])
+        for s in range(self.shards):
+            lo, hi = starts[s], starts[s + 1]
+            self._src_sh[s, : hi - lo] = src_o[lo:hi]
+            self._dst_sh[s, : hi - lo] = dst_o[lo:hi]
+        self.version = int(version)
+        self.overflow = False
+        self._device = None  # (ShardedGraph, RingGraph | None) cache
+
+    # -- snapshot ------------------------------------------------------------
+
+    @property
+    def capacity_per_shard(self) -> int:
+        return self._src_sh.shape[1]
+
+    @property
+    def num_edges(self) -> int:
+        return int(self._counts.sum())
+
+    def to_host_edges(self) -> tuple[np.ndarray, np.ndarray]:
+        """Live edges, shard-major with per-shard FIFO order.
+
+        This order is the fixpoint of the partitioner: re-partitioning it
+        reproduces the exact per-shard sequences, so a state rebuilt from
+        ``to_host_edges()`` has bit-identical device mirrors.
+        """
+        src = np.concatenate(
+            [self._src_sh[s, : self._counts[s]] for s in range(self.shards)]
+        )
+        dst = np.concatenate(
+            [self._dst_sh[s, : self._counts[s]] for s in range(self.shards)]
+        )
+        return src, dst
+
+    def host_in_degrees(self) -> np.ndarray:
+        _, dst = self.to_host_edges()
+        return np.bincount(dst, minlength=self.n)[: self.n]
+
+    # -- shard-wise updates --------------------------------------------------
+
+    def apply_ops(
+        self, src: np.ndarray, dst: np.ndarray, insert: bool
+    ) -> np.ndarray:
+        """Apply one re-partitioned homogeneous batch; per-op applied mask."""
+        src = np.asarray(src, np.int32).reshape(-1)
+        dst = np.asarray(dst, np.int32).reshape(-1)
+        applied = np.zeros(src.shape[0], dtype=bool)
+        if src.shape[0] == 0:
+            return applied
+        shard_of, touched = partition_ops_by_dst(
+            dst, self.n_pad, self.shards
+        )
+        for s in touched:
+            idx = np.where(shard_of == s)[0]
+            if insert:
+                free = self.capacity_per_shard - int(self._counts[s])
+                take = idx[:free]
+                c = int(self._counts[s])
+                self._src_sh[s, c : c + len(take)] = src[take]
+                self._dst_sh[s, c : c + len(take)] = dst[take]
+                self._counts[s] += len(take)
+                applied[take] = True
+                if len(take) < len(idx):
+                    self.overflow = True  # sticky; skipped ops stay unapplied
+            else:
+                # vectorized first-match delete (same ``apply_batch``
+                # batch semantics: at most ONE live copy removed per
+                # (src, dst) pair per batch — the session's occurrence
+                # split feeds duplicate pairs in separate batches).
+                # Stable argsort + searchsorted finds each pair's
+                # earliest (FIFO) live slot in one pass instead of an
+                # O(ops x live) python scan.
+                c = int(self._counts[s])
+                live_s = self._src_sh[s, :c]
+                live_d = self._dst_sh[s, :c]
+                base = np.int64(self.n + 1)
+                live_keys = live_s.astype(np.int64) * base + live_d
+                op_keys = src[idx].astype(np.int64) * base + dst[idx]
+                first_of_pair = np.zeros(len(idx), dtype=bool)
+                first_of_pair[np.unique(op_keys, return_index=True)[1]] = True
+                order = np.argsort(live_keys, kind="stable")
+                pos = np.searchsorted(live_keys[order], op_keys)
+                cand = np.where(first_of_pair & (pos < c))[0]
+                hit = cand[live_keys[order[pos[cand]]] == op_keys[cand]]
+                if len(hit):
+                    kill = np.zeros(c, dtype=bool)
+                    kill[order[pos[hit]]] = True
+                    applied[idx[hit]] = True
+                    keep = ~kill  # stable compaction: FIFO order preserved
+                    nk = int(keep.sum())
+                    self._src_sh[s, :nk] = live_s[keep]
+                    self._dst_sh[s, :nk] = live_d[keep]
+                    self._src_sh[s, nk:c] = -1
+                    self._dst_sh[s, nk:c] = -1
+                    self._counts[s] = nk
+        if applied.any():
+            self.version += 1  # once per batch that changed the graph
+            self._device = None
+        return applied
+
+    def regrow(self, *, capacity_per_shard: int | None = None,
+               growth: float = 2.0) -> None:
+        """Double (or set) per-shard capacity; clears ``overflow``,
+        preserves ``version`` and the per-shard FIFO order."""
+        new_cap = int(
+            capacity_per_shard
+            or max(int(self.capacity_per_shard * growth),
+                   self.capacity_per_shard + 1)
+        )
+        if new_cap > self.capacity_per_shard:
+            grown_s = np.full((self.shards, new_cap), -1, dtype=np.int32)
+            grown_d = np.full((self.shards, new_cap), -1, dtype=np.int32)
+            grown_s[:, : self.capacity_per_shard] = self._src_sh
+            grown_d[:, : self.capacity_per_shard] = self._dst_sh
+            self._src_sh, self._dst_sh = grown_s, grown_d
+            self._device = None
+        self.overflow = False
+
+    # -- device mirrors ------------------------------------------------------
+
+    def device_graphs(self, *, edge_chunks: int, want_ring: bool):
+        """The device-resident mirrors, rebuilt lazily after updates."""
+        if self._device is None:
+            from repro.core.distributed import build_sharded_graph
+
+            src, dst = self.to_host_edges()
+            dcount = max(len(jax.devices()), 1)
+            # generous edge padding + m normalized to m_pad: the compiled
+            # serve steps key on the device mirror's static metadata, so
+            # update batches that stay within one padded capacity band
+            # reuse the same executable instead of recompiling per edge
+            sg = build_sharded_graph(
+                src, dst, self.n,
+                pad_nodes=self.shards,
+                # the band floor must stay divisible by edge_chunks or
+                # _push_chunked's reshape assertion fires
+                pad_edges=max(edge_chunks * dcount,
+                              pad_to_multiple(1024, edge_chunks)),
+            )
+            sg = sg.replace(m=sg.m_pad)
+            rg = None
+            if want_ring:
+                rg = self._build_ring(src, dst)
+            self._device = (sg, rg)
+        elif want_ring and self._device[1] is None:
+            src, dst = self.to_host_edges()
+            self._device = (self._device[0], self._build_ring(src, dst))
+        return self._device
+
+    def _build_ring(self, src: np.ndarray, dst: np.ndarray):
+        from repro.core.ring import build_ring_graph
+
+        rg = build_ring_graph(src, dst, self.n, shards=self.shards)
+        # m normalized to the padded indices length for the same
+        # compiled-step-reuse reason as the ShardedGraph mirror above
+        return rg.replace(m=int(rg.indices.shape[0]))
+
+
+# ---------------------------------------------------------------------------
+# Sharded backend — mesh execution behind the same contract
+# ---------------------------------------------------------------------------
+
+
+class ShardedBackend:
+    """Mesh-sharded execution: dst-partitioned graph, distributed probe.
+
+    Construct from a :class:`GraphHandle` (``GraphHandle.shard`` does
+    exactly this) or an existing :class:`ShardedGraphState`.  ``shards``
+    is the row-partition count = the mesh's ``model`` extent; the mesh
+    defaults to ``(n_devices // shards, shards)`` over ``("data",
+    "model")`` — walk columns shard over ``data``, frontier rows over
+    ``model`` (the core/distributed.py layout).
+
+    Serving loops *walk-chunks*: each chunk samples ``<= walk_chunk``
+    walks per query on device (per-query streams via
+    ``fold_in(stream, chunk)``), runs the distributed telescoped probe —
+    auto-partitioned (``probe='spmd'``) or the shard_map ring
+    (``probe='ring'``) — and folds per-query partial counts on host.
+    The epilogue (1/n_r, truncation shift, diagonal fix, top-k) matches
+    the local path's conventions so results are tolerance-comparable.
+
+    The fused update->query epoch is not offered here
+    (``supports_epoch=False``): its donated-buffer contract is a
+    single-device optimization with no mesh analogue yet.
+    """
+
+    name = "sharded"
+    supports_epoch = False
+    variants = ("auto", "telescoped")
+
+    def __init__(
+        self,
+        state: ShardedGraphState | GraphHandle,
+        *,
+        params: ProbeSimParams,
+        shards: int | None = None,
+        mesh=None,
+        walk_chunk: int = 128,
+        probe: str = "spmd",
+        edge_chunks: int = 4,
+        capacity_per_shard: int | None = None,
+        use_kernel: bool = False,
+    ):
+        if probe not in ("spmd", "ring"):
+            raise ValueError(f"probe must be 'spmd' or 'ring', got {probe!r}")
+        if use_kernel:
+            # refuse rather than silently serve the non-kernel mesh probe
+            raise ValueError(
+                "the sharded backend has no Pallas-kernel probe path; "
+                "use_kernel=True is only available on the local backend"
+            )
+        if isinstance(state, GraphHandle):
+            state = state.shard(
+                shards=shards, mesh=mesh,
+                capacity_per_shard=capacity_per_shard,
+            )
+        if shards is not None and shards != state.shards:
+            raise ValueError(
+                f"shards={shards} != state partitioned into {state.shards}"
+            )
+        self.state = state
+        self.params = params
+        self.walk_chunk = int(walk_chunk)
+        self.probe = probe
+        self.edge_chunks = int(edge_chunks)
+        if mesh is None:
+            ndev = len(jax.devices())
+            s = state.shards
+            if ndev % s:
+                raise ValueError(
+                    f"{s} shards need a device count divisible by {s}; "
+                    f"have {ndev} (pass an explicit mesh= to override)"
+                )
+            mesh = make_mesh((ndev // s, s), ("data", "model"))
+        if "model" not in mesh.axis_names:
+            raise ValueError(
+                f"ShardedBackend needs a mesh with a 'model' axis (frontier "
+                f"rows shard over it); got axes {tuple(mesh.axis_names)}"
+            )
+        if mesh.shape["model"] != state.shards:
+            raise ValueError(
+                f"mesh model extent {mesh.shape['model']} != "
+                f"shards {state.shards}"
+            )
+        self.mesh = mesh
+        self._steps: dict = {}  # (Q, B) -> compiled chunk step
+
+    # -- snapshot state ------------------------------------------------------
+
+    @property
+    def n(self) -> int:
+        return self.state.n
+
+    @property
+    def version(self) -> int:
+        return self.state.version
+
+    @property
+    def overflow(self) -> bool:
+        return self.state.overflow
+
+    def host_in_degrees(self) -> np.ndarray:
+        return self.state.host_in_degrees()
+
+    def dispatch_label(self, variant: str) -> str:
+        """Envelope ``variant`` field: records the mesh path that served."""
+        return f"sharded[{self.probe}]"
+
+    def to_host_edges(self) -> tuple[np.ndarray, np.ndarray]:
+        return self.state.to_host_edges()
+
+    # -- updates (shard-wise) ------------------------------------------------
+
+    def apply_ops(
+        self, src: np.ndarray, dst: np.ndarray, insert: bool
+    ) -> np.ndarray:
+        return self.state.apply_ops(src, dst, insert)
+
+    def regrow(self, **kwargs) -> None:
+        # map GraphHandle.regrow's kwargs onto per-shard capacity; k_max
+        # has no ELL analogue here and capacity is per shard already
+        kwargs.pop("k_max", None)
+        cap = kwargs.pop("capacity", None)
+        if cap is not None and "capacity_per_shard" not in kwargs:
+            kwargs["capacity_per_shard"] = pad_to_multiple(
+                int(cap), self.state.shards
+            ) // self.state.shards
+        if "capacity_per_shard" in kwargs:
+            # an explicit total is split evenly; on a skewed dst
+            # distribution that split can undershoot the hot shard's
+            # current buffer — clamp so regrow always makes progress
+            # (never clear the overflow flag without adding room)
+            kwargs["capacity_per_shard"] = max(
+                int(kwargs["capacity_per_shard"]),
+                self.state.capacity_per_shard + 1,
+            )
+        self.state.regrow(**kwargs)
+
+    # -- queries -------------------------------------------------------------
+
+    def serve_one(self, spec: QuerySpec, key, *, variant: str, n_r: int) -> dict:
+        est, idx, vals = self.serve_batch(
+            spec.kind, [spec.node], jnp.stack([key]),
+            k=spec.k or 0, n_r=n_r,
+        )
+        if spec.kind == "single_source":
+            return dict(scores=est[0])
+        return dict(topk_nodes=idx[0], topk_scores=vals[0])
+
+    def serve_batch(
+        self, kind: str, us, keys, *, key=None, k: int = 0, n_r: int
+    ) -> tuple:
+        """Chunked mesh dispatches + host epilogue; see class docstring."""
+        us = np.asarray(us, np.int32).reshape(-1)
+        q = us.shape[0]
+        if keys is None:
+            if key is None:
+                raise ValueError("serve_batch needs `key` or per-query `keys`")
+            keys = jax.random.split(key, q)  # legacy scalar-key semantics
+        sg, rg = self.state.device_graphs(
+            edge_chunks=self.edge_chunks, want_ring=self.probe == "ring"
+        )
+        us_dev = jnp.asarray(us)
+        acc = np.zeros((q, self.n), np.float64)
+        done = 0
+        chunk_i = 0
+        while done < n_r:
+            b = min(self.walk_chunk, n_r - done)
+            step = self._chunk_step(q, b, sg, rg)
+            chunk_keys = jax.vmap(
+                lambda kq: jax.random.fold_in(kq, chunk_i)
+            )(keys)
+            with set_mesh(self.mesh):
+                part = step(rg if self.probe == "ring" else sg,
+                            us_dev, chunk_keys)
+            acc += np.asarray(part, np.float64)[:, : self.n]
+            done += b
+            chunk_i += 1
+        est = (acc / n_r).astype(np.float32)
+        p = self.params
+        if p.truncation_shift:
+            est = np.where(est > 0, est + p.eps_t / 2, est)
+        est[np.arange(q), us] = 1.0  # same diagonal convention as local
+        if kind == "single_source":
+            return est, None, None
+        masked = est.copy()
+        masked[np.arange(q), us] = -np.inf
+        idx = np.argsort(-masked, axis=1, kind="stable")[:, :k]
+        vals = np.take_along_axis(masked, idx, axis=1)
+        return None, idx.astype(np.int32), vals.astype(np.float32)
+
+    def _chunk_step(self, q: int, b: int, sg, rg):
+        """Compiled mesh step: (graph, us [Q], keys [Q]) -> counts [Q, n_pad].
+
+        One step samples ``b`` walks per query (each query from its own
+        folded stream) and probes all ``Q*b`` walk columns through the
+        distributed telescoped push; compiled once per (Q, b, graph
+        capacity band) shape.
+        """
+        shape_band = (
+            (rg.n_pad, rg.src_sh.shape) if self.probe == "ring"
+            else (sg.n_pad, sg.m_pad)
+        )
+        cache_key = (q, b, self.probe, shape_band)
+        if cache_key in self._steps:
+            return self._steps[cache_key]
+        from repro.core.distributed import (
+            graph_specs,
+            probe_walks_sharded,
+            sample_walks_sharded,
+        )
+
+        p = self.params
+        sqrt_c = p.sqrt_c
+        max_len = p.max_len
+        eps_p = p.eps_p
+        edge_chunks = self.edge_chunks
+        use_ring = self.probe == "ring"
+
+        def step(graph, us, keys):
+            def sample_one(kq, u):
+                return sample_walks_sharded(
+                    kq, graph, u[None], walks_per_query=b,
+                    max_len=max_len, sqrt_c=sqrt_c,
+                )  # [b, L]
+
+            walks = jax.vmap(sample_one)(keys, us).reshape(q * b, max_len)
+            if use_ring:
+                from repro.core.ring import probe_walks_ring
+
+                scores = probe_walks_ring(
+                    graph, walks, sqrt_c=sqrt_c, eps_p=eps_p
+                )  # [n_pad, Q*b]
+            else:
+                scores = probe_walks_sharded(
+                    graph, walks, sqrt_c=sqrt_c, eps_p=eps_p,
+                    edge_chunks=edge_chunks,
+                )
+            n_pad = scores.shape[0]
+            return scores.reshape(n_pad, q, b).sum(axis=2).T  # [Q, n_pad]
+
+        with set_mesh(self.mesh):
+            if use_ring:
+                from repro.core.ring import ring_graph_specs
+
+                gspecs = ring_graph_specs(rg)
+            else:
+                gspecs = graph_specs(sg)
+            jitted = jax.jit(
+                step,
+                in_shardings=specs_to_shardings(
+                    (gspecs, P(), P()), mesh=self.mesh
+                ),
+            )
+        self._steps[cache_key] = jitted
+        return jitted

@@ -173,6 +173,53 @@ class GraphHandle:
         """The live (non-padding) edge list on host — rebuild/IO escape hatch."""
         return graph_to_host_edges(self.g)
 
+    def shard(
+        self,
+        *,
+        shards: int | None = None,
+        mesh=None,
+        capacity_per_shard: int | None = None,
+    ):
+        """Destination-partitioned mirror of this handle's live edges.
+
+        Returns a :class:`repro.api.backend.ShardedGraphState`: per-shard
+        host edge buffers (``partition_edges_by_dst`` layout, plus
+        capacity headroom matching this handle's spare COO capacity) from
+        which the device-resident sharded mirrors are built lazily.  The
+        state starts at this handle's ``version`` and keeps
+        ``to_host_edges``/``version`` coherent through its own shard-wise
+        updates; it does NOT track later mutations of this handle — it is
+        a placement of the current snapshot, exactly like ``copy()`` is.
+
+        ``shards`` defaults to the ``model`` extent of ``mesh`` (or the
+        local device count when neither is given).
+        """
+        from repro.api.backend import ShardedGraphState
+
+        if shards is None:
+            if mesh is not None and "model" in mesh.axis_names:
+                shards = int(mesh.shape["model"])
+            else:
+                shards = max(len(jax.devices()), 1)
+        src, dst = self.to_host_edges()
+        if capacity_per_shard is None and self.capacity > len(src):
+            # carry the handle's insertion headroom over, spread per shard
+            from repro.graph.partition import pad_to_multiple
+
+            rows = pad_to_multiple(self.n, shards) // shards
+            per_shard_live = (
+                int(np.bincount(dst // rows, minlength=shards).max())
+                if len(dst) else 0
+            )
+            spare = self.capacity - len(src)
+            capacity_per_shard = per_shard_live + max(spare // shards, 1)
+        return ShardedGraphState(
+            src, dst, self.n,
+            shards=shards,
+            capacity_per_shard=capacity_per_shard,
+            version=self.version,
+        )
+
     def set_mirrors(
         self,
         g: Graph | None = None,

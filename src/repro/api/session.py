@@ -26,11 +26,19 @@ here and are bit-identical to their pre-session behavior):
   explicit ``key`` is bit-identical to the legacy call under that key;
 * ``submit``/``drain`` — the serving path: per-query PRNG streams assigned
   at submit time, fixed-size repeat-padded batches through the fused
-  multi-query step (one compiled dispatch per batch);
+  multi-query step (one compiled dispatch per batch); ``submit`` returns
+  a :class:`QueryTicket` for async consumption (``poll``/``result``) —
+  ``drain`` is the synchronous collect-everything special case;
 * ``update``/``epoch`` — updates applied through the coordinated
   both-mirrors path; ``epoch`` fuses one update batch + one query batch
   into a single jitted step with zero host transfers in between, and
   auto-regrows on capacity overflow (nothing is ever silently dropped).
+
+Execution is pluggable (repro.api.backend): the session owns specs, PRNG
+streams, queues/tickets, stats and envelopes, and dispatches through a
+``Backend`` — ``LocalBackend`` (the single-device fused path above,
+bit-identical to the pre-backend session) or ``ShardedBackend`` (the
+same contract over a device mesh; ``epoch`` is local-only).
 
 The §4.4 "best of both worlds" switch lives in the session *planner*
 (:meth:`plan`): ``variant='auto'`` picks the deterministic prefix-tree
@@ -57,11 +65,11 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.api.backend import Backend, LocalBackend, ShardedBackend
 from repro.api.handle import GraphHandle
 from repro.api.spec import QuerySpec, ResultEnvelope, as_spec
-from repro.core.multisource import fused_serve_impl, multi_source, multi_source_topk
+from repro.core.multisource import fused_serve_impl
 from repro.core.params import ProbeSimParams, abs_error_bound, make_params
-from repro.core.probesim import single_source, topk
 from repro.graph.dynamic import (
     UpdateBatch,
     apply_update_batch,
@@ -91,6 +99,38 @@ class EngineStats:
 
     def as_dict(self) -> dict:
         return dataclasses.asdict(self)
+
+
+@dataclass
+class QueryTicket:
+    """Async handle for one submitted query.
+
+    ``submit()`` fixes the query's PRNG stream and returns a ticket;
+    the answer materializes when a drain/epoch serves the ticket's batch.
+    ``poll()`` is the non-blocking check (None while pending); ``result()``
+    forces service — it drains queued batches (in submission order, so
+    earlier tickets resolve on the way) until this ticket is answered.
+    ``drain()`` remains the synchronous serve-everything special case.
+    """
+
+    spec: QuerySpec
+    seq: int  # session submission sequence number (the PRNG stream id)
+    _session: "SimRankSession" = field(repr=False, default=None)
+    envelope: ResultEnvelope | None = field(default=None, repr=False)
+
+    @property
+    def done(self) -> bool:
+        return self.envelope is not None
+
+    def poll(self) -> ResultEnvelope | None:
+        """The envelope if this ticket has been served, else None."""
+        return self.envelope
+
+    def result(self, *, budget_walks: int | None = None) -> ResultEnvelope:
+        """Block until served: runs queued batches up to this ticket."""
+        if self.envelope is None:
+            self._session._drain_until(self, budget_walks=budget_walks)
+        return self.envelope
 
 
 @dataclass
@@ -206,13 +246,24 @@ def _occurrence_numbers(src: np.ndarray, dst: np.ndarray, n: int) -> np.ndarray:
 
 
 class SimRankSession:
-    """Single-host SimRank serving session over an owned :class:`GraphHandle`.
+    """SimRank serving session over a pluggable execution :class:`Backend`.
 
-    ``walk_chunk`` is the total lane-column width of the fused serve step;
-    ``batch_q`` the fixed query width of ``drain()``/``epoch()`` batches
-    (short batches are repeat-padded so jit compiles one step per shape);
-    ``update_batch`` the fixed op width of epoch update batches.  ``top_k``
-    is the default k for specs that don't pin one.
+    ``backend`` selects the execution substrate behind the one
+    ``QuerySpec -> ResultEnvelope`` surface: ``"local"`` (default) is the
+    single-device fused path over an owned :class:`GraphHandle` —
+    bit-identical to the pre-backend session under shared keys;
+    ``"sharded"`` places the graph on a device mesh
+    (:class:`repro.api.backend.ShardedBackend`: dst-partitioned shards,
+    distributed probe, shard-wise updates; size the mesh with ``shards=``
+    / ``mesh=``).  A ready-made :class:`Backend` instance can be passed
+    directly as the first argument instead of a handle.
+
+    ``walk_chunk`` is the total lane-column width of the fused serve step
+    (per-query walk-chunk width on the sharded backend); ``batch_q`` the
+    fixed query width of ``drain()``/``epoch()`` batches (short batches
+    are repeat-padded so jit compiles one step per shape);
+    ``update_batch`` the fixed op width of epoch update batches.
+    ``top_k`` is the default k for specs that don't pin one.
 
     With ``auto_regrow`` (default), capacity overflow triggers host-side
     compaction into 2x buffers and the skipped inserts are retried — no
@@ -232,7 +283,7 @@ class SimRankSession:
 
     def __init__(
         self,
-        handle: GraphHandle,
+        handle: GraphHandle | Backend,
         *,
         c: float = 0.6,
         eps_a: float = 0.1,
@@ -245,26 +296,96 @@ class SimRankSession:
         auto_regrow: bool = True,
         use_kernel: bool = False,
         own_graph: bool = True,
+        backend: str | Backend = "local",
+        shards: int | None = None,
+        mesh=None,
+        backend_options: dict | None = None,
     ):
-        if not isinstance(handle, GraphHandle):
+        if isinstance(handle, (LocalBackend, ShardedBackend)) or (
+            not isinstance(handle, GraphHandle) and isinstance(handle, Backend)
+        ):
+            if backend != "local":  # the untouched default
+                raise ValueError(
+                    "pass either a Backend instance or backend=..., not both"
+                )
+            backend, handle = handle, None
+        elif not isinstance(handle, GraphHandle):
             raise TypeError(
                 "SimRankSession takes a GraphHandle — build one with "
                 "GraphHandle.from_edges(src, dst, n)"
             )
-        self.handle = handle.copy() if own_graph else handle
-        self._owns_graph = own_graph
+        elif not isinstance(backend, str):
+            # a GraphHandle positional + a ready Backend instance: the
+            # handle would be silently shadowed by the backend's own graph
+            raise ValueError(
+                "a Backend instance brings its own graph state — pass it "
+                "as the first argument instead of a GraphHandle"
+            )
         self._plan_deg: tuple[int, np.ndarray] | None = None  # (version, in_deg)
-        self.params: ProbeSimParams = make_params(
-            handle.n, c=c, eps_a=eps_a, delta=delta
-        )
         self.walk_chunk = walk_chunk
         self.top_k = top_k
         self.batch_q = batch_q
         self.update_batch = update_batch
         self.auto_regrow = auto_regrow
         self.use_kernel = use_kernel
+        if isinstance(backend, str):
+            if backend == "local":
+                if shards is not None or mesh is not None or backend_options:
+                    # a forgotten backend="sharded" must not silently
+                    # build an unsharded session
+                    raise ValueError(
+                        "shards/mesh/backend_options only apply to "
+                        "backend='sharded' — did you forget to set it?"
+                    )
+                self.handle = handle.copy() if own_graph else handle
+                self._owns_graph = own_graph
+                self.params = make_params(
+                    handle.n, c=c, eps_a=eps_a, delta=delta
+                )
+                self.backend: Backend = LocalBackend(
+                    self.handle, params=self.params,
+                    walk_chunk=walk_chunk, use_kernel=use_kernel,
+                )
+            elif backend == "sharded":
+                self.params = make_params(
+                    handle.n, c=c, eps_a=eps_a, delta=delta
+                )
+                self.backend = ShardedBackend(
+                    handle, params=self.params, shards=shards, mesh=mesh,
+                    walk_chunk=walk_chunk, use_kernel=use_kernel,
+                    **(backend_options or {}),
+                )
+                # the sharded state owns a partitioned copy of the edges;
+                # the constructor handle is not kept (it would go stale on
+                # the first shard-wise update)
+                self.handle = None
+                self._owns_graph = True
+            else:
+                raise ValueError(
+                    f"backend must be 'local', 'sharded' or a Backend "
+                    f"instance, got {backend!r}"
+                )
+        else:
+            if shards is not None or mesh is not None or backend_options:
+                raise ValueError(
+                    "shards/mesh/backend_options configure session-built "
+                    "backends; a ready Backend instance already carries "
+                    "its geometry — construct it with those options"
+                )
+            self.backend = backend
+            self.handle = getattr(backend, "handle", None)
+            # a caller-supplied backend brought its own graph state; the
+            # session did NOT copy it, so it must never claim the exclusive
+            # buffer ownership the donating epoch step requires (construct
+            # from a handle with backend="local" for epoch support)
+            self._owns_graph = False
+            # adopt the backend's error-budget accounting when it has one,
+            # so envelopes report the bound the executing substrate uses
+            self.params = getattr(backend, "params", None) or make_params(
+                backend.n, c=c, eps_a=eps_a, delta=delta
+            )
         self.key = jax.random.key(seed)
-        self.query_queue: deque[tuple[QuerySpec, Array]] = deque()
+        self.query_queue: deque[tuple[QuerySpec, Array, QueryTicket]] = deque()
         self.update_queue: deque[tuple[int, int, bool]] = deque()
         self.stats = EngineStats()
         self._seq = 0  # submission counter -> per-query PRNG stream
@@ -274,12 +395,12 @@ class SimRankSession:
     @property
     def version(self) -> int:
         """Current graph snapshot id (bumped once per applied update batch)."""
-        return self.handle.version
+        return self.backend.version
 
     @property
     def overflow(self) -> bool:
         """Sticky capacity signal (cleared by ``regrow``)."""
-        return self.handle.overflow
+        return self.backend.overflow
 
     @property
     def pending(self) -> tuple[int, int]:
@@ -288,12 +409,24 @@ class SimRankSession:
 
     def error_bound(self, n_r: int | None = None) -> float:
         """Thm 1+2 absolute-error bound at the effective walk count."""
-        return abs_error_bound(self.params, n=self.handle.n, n_r=n_r)
+        return abs_error_bound(self.params, n=self.backend.n, n_r=n_r)
 
     def regrow(self, **kwargs) -> None:
         """Manual capacity recovery (see :meth:`GraphHandle.regrow`)."""
-        self.handle.regrow(**kwargs)
+        self.backend.regrow(**kwargs)
         self.stats.regrows += 1
+
+    def record_retry(self, n: int = 1) -> None:
+        """Public hook for dispatch-layer retries (straggler policies).
+
+        ``EngineStats`` is owned by the session/backend pair; external
+        dispatch wrappers (``repro.serving.straggler`` callers) report
+        their re-dispatches through this method instead of mutating
+        ``stats`` fields directly.
+        """
+        if n < 0:
+            raise ValueError(f"retry count must be >= 0, got {n}")
+        self.stats.retries += n
 
     # -- PRNG streams --------------------------------------------------------
 
@@ -316,14 +449,20 @@ class SimRankSession:
         fused telescoped path otherwise.
         """
         if spec.variant != "auto":
+            if spec.variant not in self.backend.variants:
+                raise ValueError(
+                    f"variant {spec.variant!r} is not available on the "
+                    f"{self.backend.name!r} backend "
+                    f"(supports {self.backend.variants})"
+                )
             return spec.variant
-        if spec.nodes is not None:
+        if spec.nodes is not None or "tree" not in self.backend.variants:
             return "telescoped"
         n_r = spec.budget_walks or self.params.n_r
         # host in-degree snapshot, refreshed once per graph version — the
         # planner must not pay a device->host sync per query on the hot path
         if self._plan_deg is None or self._plan_deg[0] != self.version:
-            self._plan_deg = (self.version, np.asarray(self.handle.eg.in_deg))
+            self._plan_deg = (self.version, self.backend.host_in_degrees())
         d = int(self._plan_deg[1][spec.node])
         if d > 0 and n_r >= 8 * d:
             return "tree"
@@ -348,47 +487,25 @@ class SimRankSession:
             spec = dataclasses.replace(spec, budget_walks=budget_walks)
         variant = self.plan(spec)
         n_r = spec.budget_walks or self.params.n_r
-        g, eg = self.handle.g, self.handle.eg
         t0 = time.time()
         if spec.nodes is None:
-            p = (
-                self.params
-                if spec.budget_walks is None
-                else dataclasses.replace(self.params, n_r=n_r)
-            )
             key = spec.key if spec.key is not None else self._query_key()
-            if spec.kind == "single_source":
-                est = single_source(
-                    key, g, eg, spec.node, p, variant=variant,
-                    walk_chunk=self.walk_chunk, use_kernel=self.use_kernel,
-                )
-                out = dict(scores=np.asarray(est))
-            else:
-                idx, vals = topk(
-                    key, g, eg, spec.node, spec.k, p, variant=variant,
-                    walk_chunk=self.walk_chunk, use_kernel=self.use_kernel,
-                )
-                out = dict(topk_nodes=np.asarray(idx), topk_scores=np.asarray(vals))
+            out = self.backend.serve_one(spec, key, variant=variant, n_r=n_r)
         else:
             if variant != "telescoped":
                 raise ValueError(
                     f"batched specs require the fused telescoped path, "
                     f"got variant={variant!r}"
                 )
-            us = jnp.asarray(spec.nodes, jnp.int32)
             key, keys = self._multi_keys(spec)
-            common = dict(
-                lanes=self.walk_chunk, n_r=spec.budget_walks, keys=keys,
-                use_kernel=self.use_kernel,
+            est, idx, vals = self.backend.serve_batch(
+                spec.kind, spec.nodes, keys, key=key, k=spec.k or 0, n_r=n_r
             )
-            if spec.kind == "single_source":
-                est = multi_source(key, g, eg, us, self.params, **common)
-                out = dict(scores=np.asarray(est))
-            else:
-                idx, vals = multi_source_topk(
-                    key, g, eg, us, spec.k, self.params, **common
-                )
-                out = dict(topk_nodes=np.asarray(idx), topk_scores=np.asarray(vals))
+            out = (
+                dict(scores=est)
+                if spec.kind == "single_source"
+                else dict(topk_nodes=idx, topk_scores=vals)
+            )
         dt = time.time() - t0
         self.stats.steps += 1
         self.stats.queries += spec.q
@@ -400,7 +517,7 @@ class SimRankSession:
             latency_s=dt,
             version=self.version,
             error_bound=self.error_bound(n_r),
-            variant=variant,
+            variant=self.backend.dispatch_label(variant),
             **out,
         )
 
@@ -421,8 +538,12 @@ class SimRankSession:
 
     # -- queued serving (submit -> fused drain) ------------------------------
 
-    def submit(self, spec: QuerySpec | int) -> None:
-        """Enqueue a single-node spec (PRNG stream fixed NOW: batch-invariant)."""
+    def submit(self, spec: QuerySpec | int) -> QueryTicket:
+        """Enqueue a single-node spec (PRNG stream fixed NOW: batch-invariant).
+
+        Returns a :class:`QueryTicket` — poll it, ``result()`` it, or
+        ignore it and collect everything with :meth:`drain` as before.
+        """
         spec = as_spec(spec, default_k=self.top_k)
         if spec.nodes is not None:
             raise ValueError("submit takes single-node specs; use query() "
@@ -432,8 +553,14 @@ class SimRankSession:
                 "queued serving uses the fused telescoped path; "
                 f"variant={spec.variant!r} is only available via query()"
             )
-        key = spec.key if spec.key is not None else self._query_key()
-        self.query_queue.append((spec, key))
+        if spec.key is not None:
+            key, seq = spec.key, -1  # caller-pinned stream
+        else:
+            seq = self._seq
+            key = self._query_key()
+        ticket = QueryTicket(spec=spec, seq=seq, _session=self)
+        self.query_queue.append((spec, key, ticket))
+        return ticket
 
     def _batch_group(self, spec: QuerySpec):
         """Specs that can share one fused dispatch (same shapes/budget)."""
@@ -456,31 +583,24 @@ class SimRankSession:
 
     def _serve_fused(
         self,
-        batch: list[tuple[QuerySpec, Array]],
+        batch: list[tuple],
         budget_walks: int | None,
     ) -> list[ResultEnvelope]:
-        """One fused dispatch for a (possibly repeat-padded) query batch."""
+        """One fused dispatch for a (possibly repeat-padded) query batch.
+
+        Items are ``(spec, key)`` or ``(spec, key, ticket)`` tuples; the
+        returned envelope list is positional (tickets — when present —
+        are filled by the caller for the live slice only, so repeat
+        padding never double-assigns).
+        """
         spec0 = batch[0][0]
         n_r = spec0.budget_walks or budget_walks or self.params.n_r
-        us = jnp.asarray([s.node for s, _ in batch], jnp.int32)
-        keys = jnp.stack([k for _, k in batch])
-        g, eg = self.handle.g, self.handle.eg
+        us = [item[0].node for item in batch]
+        keys = jnp.stack([item[1] for item in batch])
         t0 = time.time()
-        if spec0.kind == "topk":
-            idx, vals = multi_source_topk(
-                None, g, eg, us, spec0.k, self.params,
-                lanes=self.walk_chunk, n_r=n_r, keys=keys,
-                use_kernel=self.use_kernel,
-            )
-            idx = np.asarray(idx)  # device sync
-            vals = np.asarray(vals)
-            est = None
-        else:
-            est = np.asarray(multi_source(
-                None, g, eg, us, self.params,
-                lanes=self.walk_chunk, n_r=n_r, keys=keys,
-                use_kernel=self.use_kernel,
-            ))
+        est, idx, vals = self.backend.serve_batch(
+            spec0.kind, us, keys, k=spec0.k or 0, n_r=n_r
+        )
         dt = time.time() - t0
         self.stats.steps += 1
         ver = self.version
@@ -488,7 +608,7 @@ class SimRankSession:
         return [
             ResultEnvelope(
                 kind=spec0.kind,
-                node=s.node,
+                node=item[0].node,
                 scores=None if est is None else est[i],
                 topk_nodes=None if est is not None else idx[i],
                 topk_scores=None if est is not None else vals[i],
@@ -496,10 +616,22 @@ class SimRankSession:
                 latency_s=dt,
                 version=ver,
                 error_bound=bound,
-                variant="telescoped",
+                variant=self.backend.dispatch_label("telescoped"),
             )
-            for i, (s, _) in enumerate(batch)
+            for i, item in enumerate(batch)
         ]
+
+    def _serve_next_batch(
+        self, budget_walks: int | None
+    ) -> list[ResultEnvelope]:
+        """Pop + serve ONE fused batch; fills tickets for the live slice."""
+        batch, live = self._pop_query_batch()
+        served = self._serve_fused(batch, budget_walks)[:live]
+        for item, env in zip(batch[:live], served):
+            if len(item) > 2 and item[2] is not None:
+                item[2].envelope = env
+        self.stats.queries += live
+        return served
 
     def drain(self, *, budget_walks: int | None = None) -> list[ResultEnvelope]:
         """Serve every queued spec in fused batches of ``batch_q``.
@@ -508,13 +640,25 @@ class SimRankSession:
         dispatch; short or cut batches are padded by repeating the last
         entry (padded slots recompute an already-served query and are
         discarded).  ``budget_walks`` caps specs that don't pin their own.
+        Tickets already forced via ``result()`` have left the queue — the
+        returned list covers what was still queued, in order.
         """
         out: list[ResultEnvelope] = []
         while self.query_queue:
-            batch, live = self._pop_query_batch()
-            out.extend(self._serve_fused(batch, budget_walks)[:live])
-            self.stats.queries += live
+            out.extend(self._serve_next_batch(budget_walks))
         return out
+
+    def _drain_until(
+        self, ticket: QueryTicket, *, budget_walks: int | None = None
+    ) -> None:
+        """Serve queued batches (submission order) until ``ticket`` is done."""
+        while ticket.envelope is None and self.query_queue:
+            self._serve_next_batch(budget_walks)
+        if ticket.envelope is None:
+            raise RuntimeError(
+                "ticket is not queued in this session (was the queue "
+                "consumed by an epoch of a different session?)"
+            )
 
     # -- immediate updates ---------------------------------------------------
 
@@ -522,7 +666,7 @@ class SimRankSession:
         # validate HERE: out-of-range ids would be sentinel-masked to no-ops
         # downstream and then mistaken for capacity-overflow skips, feeding
         # an unbounded retry/regrow loop
-        n = self.handle.n
+        n = self.backend.n
         bad = (src < 0) | (src >= n) | (dst < 0) | (dst >= n)
         if bad.any():
             i = int(np.argmax(bad))
@@ -559,7 +703,7 @@ class SimRankSession:
             s, d = self._as_ops(deletes)
             self._validate_ops(s, d)
             if s.shape[0]:
-                occ = _occurrence_numbers(s, d, self.handle.n)
+                occ = _occurrence_numbers(s, d, self.backend.n)
                 for k in range(int(occ.max()) + 1):
                     m = occ == k
                     self._apply_now(s[m], d[m], False, rep)
@@ -574,13 +718,9 @@ class SimRankSession:
             return
         rep.submitted += int(src.shape[0])
         while True:
-            # pad to the next power of two so variable-size update bursts
-            # reuse a log-bounded set of compiled batch shapes
-            bucket = 1 << (int(src.shape[0]) - 1).bit_length()
-            batch = make_update_batch(
-                src, dst, insert, batch_size=bucket, n=self.handle.n
-            )
-            applied = np.asarray(self.handle.apply_batch(batch))[: src.shape[0]]
+            # the backend pads/buckets internally (pow-2 batches on the
+            # local path; shard-wise re-partition on the sharded path)
+            applied = self.backend.apply_ops(src, dst, insert)
             n_app = int(applied.sum())
             rep.applied += n_app
             self.stats.updates += n_app
@@ -595,7 +735,7 @@ class SimRankSession:
                     for s, d in zip(src[skipped], dst[skipped])
                 ]
                 return
-            self.handle.regrow()  # 2x buffers per round: terminates
+            self.backend.regrow()  # 2x buffers per round: terminates
             self.stats.regrows += 1
             rep.regrows += 1
             src, dst = src[skipped], dst[skipped]
@@ -630,7 +770,7 @@ class SimRankSession:
             [d for _, d, _ in ops],
             [i for _, _, i in ops] if ops else True,
             batch_size=self.update_batch,
-            n=self.handle.n,
+            n=self.backend.n,
         )
         return ops, batch
 
@@ -659,13 +799,22 @@ class SimRankSession:
         batch application — no point paying the fused probe for discarded
         dummy queries.
         """
+        if not self.backend.supports_epoch:
+            # the fused epoch's donated-buffer contract is a single-device
+            # optimization; on other backends run update() + drain()
+            raise NotImplementedError(
+                f"the {self.backend.name!r} backend does not support the "
+                "fused epoch step; apply update() and drain() separately"
+            )
         if not self._owns_graph:
             # epoch_step DONATES the mirror buffers; on a shared handle that
             # would invalidate every other reference to them (CPU ignores
-            # donation, so this would pass tests and corrupt in production)
+            # donation, so this would pass tests and corrupt in production).
+            # Sessions over a caller-supplied Backend instance never own the
+            # buffers (the session did not copy them) and land here too.
             raise ValueError(
                 "epoch() requires an owned graph: construct the session "
-                "with own_graph=True (the default)"
+                "from a GraphHandle with own_graph=True (the default)"
             )
         if inserts is not None:
             self.queue_update(*self._as_ops(inserts), insert=True)
@@ -682,8 +831,8 @@ class SimRankSession:
             live_q, qs, spec0 = self._pop_epoch_queries()
             n_r = spec0.budget_walks or budget_walks or p.n_r
             tk = spec0.k if spec0.kind == "topk" else 0
-            us = jnp.asarray([s.node for s, _ in qs], jnp.int32)
-            keys = jnp.stack([k for _, k in qs])
+            us = jnp.asarray([item[0].node for item in qs], jnp.int32)
+            keys = jnp.stack([item[1] for item in qs])
             acc = jnp.zeros((self.batch_q, self.handle.n), jnp.float32)
             g2, eg2, applied, est, idx, vals = epoch_step(
                 self.handle.g, self.handle.eg, batch, keys, us, acc,
@@ -725,7 +874,7 @@ class SimRankSession:
             for op in reversed(skipped):
                 self.update_queue.appendleft(op)
             requeued = len(skipped)
-            self.handle.regrow()
+            self.backend.regrow()
             self.stats.regrows += 1
             regrown = True
 
@@ -733,7 +882,7 @@ class SimRankSession:
         results = [
             ResultEnvelope(
                 kind=spec0.kind,
-                node=s.node,
+                node=item[0].node,
                 scores=None if est is None else est[i],
                 topk_nodes=None if est is not None else idx[i],
                 topk_scores=None if est is not None else vals[i],
@@ -743,8 +892,11 @@ class SimRankSession:
                 error_bound=bound,
                 variant="telescoped",
             )
-            for i, (s, _) in enumerate(qs[:live_q])
+            for i, item in enumerate(qs[:live_q])
         ]
+        for item, env in zip(qs[:live_q], results):
+            if len(item) > 2 and item[2] is not None:
+                item[2].envelope = env
         self.stats.epochs += 1
         self.stats.steps += 1
         self.stats.queries += live_q

@@ -35,6 +35,7 @@ from repro.configs.base import (
 )
 from repro.graph.sampler import block_shapes
 from repro.models.common import resolve_axis
+from repro.utils.jaxcompat import get_abstract_mesh
 from repro.training.optimizer import AdamW, warmup_cosine_schedule
 
 Array = jax.Array
@@ -76,7 +77,7 @@ def _all_axes():
 
 
 def _extent(axes) -> int:
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = get_abstract_mesh()
     if mesh is None or mesh.empty or axes is None:
         return 1
     out = 1

@@ -27,9 +27,24 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.models.common import constrain, logical_spec, mesh_axis_names
+from repro.utils.jaxcompat import legacy_auto_partitioner
 from repro.utils.pytree import static, struct
 
 Array = jax.Array
+
+
+def _constrain(x: Array, *logical: str | None) -> Array:
+    """Frontier placement hint for the auto partitioner.
+
+    Old jax's SPMD partitioner double-counts scatter contributions when the
+    scatter operand is row-sharded by an explicit constraint (see
+    jaxcompat.legacy_auto_partitioner) — there the hints are dropped and
+    placement is left to the partitioner, which is correct (tested in
+    tests/test_distributed.py) if less deliberate.
+    """
+    if legacy_auto_partitioner():
+        return x
+    return constrain(x, *logical)
 
 
 @struct
@@ -85,12 +100,18 @@ def build_sharded_graph(
 
 def graph_specs(sg: ShardedGraph) -> ShardedGraph:
     """PartitionSpec pytree matching ShardedGraph (static fields copied —
-    pytree treedefs include the static metadata)."""
+    pytree treedefs include the static metadata).
+
+    On old jax ``in_deg`` is replicated: the legacy partitioner mis-scales
+    the probe's ``concat(inv_in_deg, pad) * acc`` renormalization by the
+    axis extent when ``in_deg`` arrives row-sharded (same family of bug as
+    the ``_constrain`` gate above; [n_pad] int32 is cheap to replicate).
+    """
     tp = "model" if "model" in mesh_axis_names() else None
     all_axes = tuple(a for a in ("pod", "data", "model") if a in mesh_axis_names())
     return ShardedGraph(
         indptr=P(tp),
-        in_deg=P(tp),
+        in_deg=P(None) if legacy_auto_partitioner() else P(tp),
         indices=P(all_axes if all_axes else None),
         src=P(all_axes if all_axes else None),
         dst=P(all_axes if all_axes else None),
@@ -164,7 +185,7 @@ def _push_chunked(
     acc = jnp.zeros_like(scores)
     for ci in range(edge_chunks):
         msgs = scores[src[ci].clip(0, n_pad)]  # [mc, C]; sentinel row zero
-        msgs = constrain(msgs, "tp", "dp")
+        msgs = _constrain(msgs, "tp", "dp")
         acc = acc + jax.ops.segment_sum(
             msgs, dst[ci], num_segments=rows_total
         )
@@ -196,7 +217,7 @@ def probe_walks_sharded(
     rows_total = n_pad + _row_pad(sg)
     rows = jax.lax.broadcasted_iota(jnp.int32, (rows_total, C), 0)
     scores = jnp.zeros((rows_total, C), jnp.float32)
-    scores = constrain(scores, "tp", "dp")
+    scores = _constrain(scores, "tp", "dp")
     for p in range(L, 1, -1):
         u_p = walks[:, p - 1]  # sentinel (>= n_pad) never matches a live row
         u_prev = walks[:, p - 2]
@@ -206,7 +227,7 @@ def probe_walks_sharded(
             scores = jnp.where(scores > thresh, scores, 0.0)
         scores = _push_chunked(sg, scores, sqrt_c, edge_chunks)
         scores = jnp.where(rows == u_prev[None, :], 0.0, scores)
-        scores = constrain(scores, "tp", "dp")
+        scores = _constrain(scores, "tp", "dp")
     return scores[:n_pad]
 
 
@@ -240,7 +261,7 @@ def make_serve_step(cfg, *, queries: int, walk_chunk: int, max_len: int,
             sg, walks, sqrt_c=sqrt_c, edge_chunks=edge_chunks
         )  # [n_pad, Q*B]
         est = scores.reshape(sg.n_pad, queries, walk_chunk).sum(-1) / walk_chunk
-        est = constrain(est, "tp", None)
+        est = _constrain(est, "tp", None)
         # exclude the query nodes themselves (compare, not scatter)
         rows = jax.lax.broadcasted_iota(jnp.int32, est.shape, 0)
         est = jnp.where(rows == query_nodes[None, :], -jnp.inf, est)

@@ -20,6 +20,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.models.common import mesh_axis_names
+from repro.utils.jaxcompat import get_abstract_mesh, shard_map
 from repro.utils.pytree import static, struct
 
 Array = jax.Array
@@ -84,13 +85,18 @@ def ring_graph_abstract(n: int, m: int, shards: int, e_max: int) -> RingGraph:
 
 
 def ring_graph_specs(rg: RingGraph) -> RingGraph:
+    # in_deg replicated on old jax: see core.distributed.graph_specs (the
+    # legacy auto partitioner mis-scales the inv-in-degree renormalization
+    # when it arrives row-sharded; w_full is computed in the auto region)
+    from repro.utils.jaxcompat import legacy_auto_partitioner
+
     tp = "model" if "model" in mesh_axis_names() else None
     all_axes = tuple(a for a in ("pod", "data", "model")
                      if a in mesh_axis_names())
     return RingGraph(
         src_sh=P(tp, None, None),
         dst_sh=P(tp, None, None),
-        in_deg=P(tp),
+        in_deg=P(None) if legacy_auto_partitioner() else P(tp),
         indptr=P(tp),
         indices=P(all_axes if all_axes else None),
         n=rg.n, n_pad=rg.n_pad, m=rg.m, shards=rg.shards,
@@ -110,7 +116,7 @@ def probe_walks_ring(
     n_pad = rg.n_pad
     rows = n_pad // S
     C, L = walks.shape
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = get_abstract_mesh()
 
     w_full = jnp.where(
         rg.in_deg > 0,
@@ -167,7 +173,7 @@ def probe_walks_ring(
     data_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
     col_spec = data_axes if data_axes else None
     manual = {"model"} | set(data_axes)
-    fn = jax.shard_map(
+    fn = shard_map(
         local,
         mesh=mesh,
         in_specs=(P(col_spec, None), P("model", None, None),

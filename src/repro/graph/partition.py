@@ -111,6 +111,24 @@ def partition_edges_2d(
                 e_max=e_max, counts=counts.reshape(num_shards, num_shards))
 
 
+def partition_ops_by_dst(
+    dst: np.ndarray, n_pad: int, num_shards: int
+) -> tuple[np.ndarray, np.ndarray]:
+    """Re-partition a stream of edge ops onto destination shards.
+
+    The dynamic-update analogue of :func:`partition_edges_by_dst`: maps
+    each op to ``shard = dst // rows`` under the same range partition the
+    static build used, so shard-wise update application lands every op on
+    the shard that owns its destination row block.
+
+    Returns ``(shard_of [len(dst)], shard_ids)`` — the per-op shard and
+    the sorted unique shards touched (iterate those to apply per shard).
+    """
+    rows = n_pad // num_shards
+    shard_of = np.asarray(dst) // rows
+    return shard_of, np.unique(shard_of)
+
+
 def edge_balance_stats(counts: np.ndarray) -> dict:
     """Load-balance diagnostics for a destination partition."""
     c = np.asarray(counts, dtype=np.float64)

@@ -7,13 +7,13 @@ from __future__ import annotations
 
 import jax
 
+from repro.utils.jaxcompat import make_mesh
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return make_mesh(shape, axes)
 
 
 def make_local_mesh(shape=(2, 4), axes=("data", "model")):
@@ -22,9 +22,7 @@ def make_local_mesh(shape=(2, 4), axes=("data", "model")):
     for s in shape:
         n *= s
     assert len(jax.devices()) >= n, f"need {n} devices"
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return make_mesh(shape, axes)
 
 
 HW = dict(  # TPU v5e constants (per assignment)

@@ -5,9 +5,17 @@ dynamic update stream interleaved between query dispatches (the paper's §1
 motivation: index-free => updates are free).  Reports per-query latency and
 top-k results; optional straggler policy wraps dispatch.
 
+``--backend sharded --shards N`` serves the same stream through the
+mesh-sharded backend (dst-partitioned graph over a local device mesh;
+pair with ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` for a
+fake multi-device CPU run).  Updates then apply shard-wise — same
+version/overflow semantics, no index rebuild either way.
+
 Usage:
   python -m repro.launch.serve --nodes 20000 --edges 200000 --queries 20 \
       --updates-per-batch 100 --eps-a 0.1
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+      python -m repro.launch.serve --backend sharded --shards 4
 """
 from __future__ import annotations
 
@@ -33,6 +41,10 @@ def main() -> None:
                     help="cap walks per query (anytime mode)")
     ap.add_argument("--deadline-s", type=float, default=None)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--backend", choices=("local", "sharded"), default="local")
+    ap.add_argument("--shards", type=int, default=None,
+                    help="row-partition count for --backend sharded "
+                         "(default: local device count)")
     args = ap.parse_args()
 
     from repro.graph import powerlaw_graph
@@ -45,11 +57,19 @@ def main() -> None:
         capacity=len(src) + 100_000,
         k_max=int(in_deg.max()) + 8,
     )
+    import jax
+
+    shards = args.shards
+    if args.backend == "sharded" and shards is None:
+        shards = len(jax.devices())
     sess = SimRankSession(
-        handle, c=args.c, eps_a=args.eps_a, top_k=args.top_k, seed=args.seed
+        handle, c=args.c, eps_a=args.eps_a, top_k=args.top_k, seed=args.seed,
+        backend=args.backend, shards=shards,
     )
     print(f"graph: n={n} m={len(src)}; n_r={sess.params.n_r} walks/query "
-          f"(eps_a={args.eps_a}), max_len={sess.params.max_len}")
+          f"(eps_a={args.eps_a}), max_len={sess.params.max_len}; "
+          f"backend={sess.backend.name}"
+          + (f" shards={shards}" if args.backend == "sharded" else ""))
 
     query_nodes = rng.choice(np.where(in_deg > 0)[0], size=args.queries)
     lat = []
@@ -63,7 +83,10 @@ def main() -> None:
 
         if args.deadline_s:
             def on_retry(attempt):
-                sess.stats.retries += 1
+                # report through the public stats API — EngineStats is
+                # owned by the session/backend; external dispatch wrappers
+                # must not mutate its fields directly
+                sess.record_retry()
                 print(f"  retry {attempt} (shed budget)")
 
             # dispatch injects budget_walks per attempt (shed on retries)

@@ -3,7 +3,10 @@
 ``SimRankEngine`` and ``DynamicEngine`` delegate to
 ``repro.api.SimRankSession``; new code should use the session directly.
 ``serving.straggler`` (deadline/hedge/shed dispatch policies) remains the
-canonical home for tail-latency mitigation around any query callable.
+canonical home for tail-latency mitigation around any query callable —
+callers that track re-dispatches against a session report them through
+``SimRankSession.record_retry()`` (the stats object is owned by the
+session/backend pair; never mutate its fields from outside).
 """
 from repro.serving.dynamic_engine import DynamicEngine, DynamicStats, EpochResult
 from repro.serving.engine import EngineStats, QueryResult, SimRankEngine

@@ -1,0 +1,386 @@
+"""Backend layer: LocalBackend extraction parity, QueryTicket serving,
+ShardedBackend semantics (single-shard in-process; the 8-fake-device mesh
+parity + sharded-update invariant run in a subprocess, like
+test_distributed, because XLA_FLAGS must precede jax init)."""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.api import (
+    Backend,
+    GraphHandle,
+    LocalBackend,
+    QuerySpec,
+    ShardedBackend,
+    ShardedGraphState,
+    SimRankSession,
+)
+from repro.core import make_params
+from repro.core.probesim import single_source, topk
+
+
+@pytest.fixture()
+def handle(small_powerlaw):
+    d = small_powerlaw
+    in_deg = np.bincount(d["dst"], minlength=d["n"])
+    return GraphHandle.from_edges(
+        d["src"], d["dst"], d["n"],
+        capacity=len(d["src"]) + 64, k_max=int(in_deg.max()) + 8,
+    )
+
+
+# ---------------------------------------------------------------------------
+# LocalBackend: the extraction must be bit-identical to the core calls
+# ---------------------------------------------------------------------------
+
+
+def test_local_backend_serve_one_bit_identical_to_core(handle, key):
+    p = make_params(handle.n, c=0.6, eps_a=0.1, delta=0.01)
+    be = LocalBackend(handle, params=p, walk_chunk=128)
+    out = be.serve_one(
+        QuerySpec(kind="single_source", node=3), key,
+        variant="telescoped", n_r=p.n_r,
+    )
+    ref = single_source(
+        key, handle.g, handle.eg, 3, p, variant="telescoped", walk_chunk=128
+    )
+    np.testing.assert_array_equal(out["scores"], np.asarray(ref))
+
+    out = be.serve_one(
+        QuerySpec(kind="topk", node=3, k=7), key, variant="tree", n_r=p.n_r
+    )
+    idx, vals = topk(
+        key, handle.g, handle.eg, 3, 7, p, variant="tree", walk_chunk=128
+    )
+    np.testing.assert_array_equal(out["topk_nodes"], np.asarray(idx))
+    np.testing.assert_array_equal(out["topk_scores"], np.asarray(vals))
+
+
+def test_session_default_backend_is_local_and_shares_handle(handle):
+    sess = SimRankSession(handle)
+    assert isinstance(sess.backend, LocalBackend)
+    assert isinstance(sess.backend, Backend)  # protocol conformance
+    assert sess.backend.handle is sess.handle  # epoch donation stays valid
+    assert sess.backend.dispatch_label("tree") == "tree"
+
+
+def test_session_accepts_backend_instance(handle):
+    p = make_params(handle.n, c=0.6, eps_a=0.1, delta=0.01)
+    be = LocalBackend(handle.copy(), params=p, walk_chunk=128)
+    sess = SimRankSession(be, top_k=5)
+    assert sess.backend is be
+    assert sess.params is p  # session adopts the backend's error budget
+    env = sess.query(3)
+    assert env.topk_nodes.shape == (5,)
+
+
+# ---------------------------------------------------------------------------
+# QueryTicket async serving
+# ---------------------------------------------------------------------------
+
+
+def test_ticket_result_matches_drain_bitwise(handle):
+    sess_a = SimRankSession(handle, seed=7, top_k=5, batch_q=4)
+    sess_b = SimRankSession(handle, seed=7, top_k=5, batch_q=4)
+    nodes = [1, 2, 3]
+    drained = {}
+    for u in nodes:
+        sess_a.submit(u)
+    for u, env in zip(nodes, sess_a.drain(budget_walks=64)):
+        drained[u] = env
+    tickets = [sess_b.submit(u) for u in nodes]
+    # force out of order: the last ticket's result() serves the batch
+    last = tickets[-1].result(budget_walks=64)
+    for t, u in zip(tickets, nodes):
+        assert t.done
+        np.testing.assert_array_equal(
+            t.result().topk_scores, drained[u].topk_scores
+        )
+        np.testing.assert_array_equal(
+            t.result().topk_nodes, drained[u].topk_nodes
+        )
+    assert last is tickets[-1].envelope
+    assert sess_b.drain() == []  # queue fully consumed by result()
+
+
+def test_ticket_partial_drain_leaves_later_batches_queued(handle):
+    sess = SimRankSession(handle, seed=0, top_k=5, batch_q=2)
+    tickets = [sess.submit(u) for u in [1, 2, 3, 4, 5]]
+    assert all(t.poll() is None for t in tickets)
+    tickets[2].result(budget_walks=64)  # serves batches [1,2] and [3,4]
+    assert [t.done for t in tickets] == [True, True, True, True, False]
+    rest = sess.drain(budget_walks=64)
+    assert len(rest) == 1 and rest[0].node == 5
+    assert tickets[4].done  # drain also fills tickets
+    assert sess.pending == (0, 0)
+
+
+def test_epoch_fills_tickets(handle):
+    sess = SimRankSession(handle, seed=0, top_k=5, batch_q=4)
+    t = sess.submit(2)
+    ep = sess.epoch(inserts=(np.array([0]), np.array([1])),
+                    budget_walks=64)
+    assert t.done and t.poll() is ep.results[0]
+
+
+# ---------------------------------------------------------------------------
+# ShardedBackend semantics (single shard: runs on the plain CPU test env)
+# ---------------------------------------------------------------------------
+
+
+def test_handle_shard_keeps_edges_and_version_coherent(handle):
+    state = handle.shard(shards=1)
+    assert state.version == handle.version
+    s0, d0 = handle.to_host_edges()
+    s1, d1 = state.to_host_edges()
+    assert sorted(zip(s0.tolist(), d0.tolist())) == sorted(
+        zip(s1.tolist(), d1.tolist())
+    )
+    # headroom from the handle's spare COO capacity carried over
+    assert state.capacity_per_shard * state.shards > state.num_edges
+
+
+def test_sharded_update_then_query_equals_rebuild(handle):
+    p = make_params(handle.n, c=0.6, eps_a=0.2, delta=0.01)
+    be = ShardedBackend(handle.shard(shards=1), params=p, walk_chunk=128)
+    rng = np.random.default_rng(0)
+    ins_s = rng.integers(0, handle.n, 32).astype(np.int32)
+    ins_d = rng.integers(0, handle.n, 32).astype(np.int32)
+    assert be.apply_ops(ins_s, ins_d, True).all()
+    del_s, del_d = handle.to_host_edges()
+    assert be.apply_ops(del_s[:8], del_d[:8], False).all()
+    assert be.version == handle.version + 2
+
+    s2, d2 = be.to_host_edges()
+    rebuilt = ShardedBackend(
+        ShardedGraphState(s2, d2, handle.n, shards=1, version=be.version),
+        params=p, walk_chunk=128,
+    )
+    k = jnp.stack([jax.random.key(11)])
+    a, _, _ = be.serve_batch("single_source", [3], k, n_r=192)
+    b, _, _ = rebuilt.serve_batch("single_source", [3], k, n_r=192)
+    np.testing.assert_array_equal(a, b)  # exact, not tolerance
+
+
+def test_sharded_delete_semantics_one_copy_per_op(handle):
+    p = make_params(handle.n, c=0.6, eps_a=0.2, delta=0.01)
+    be = ShardedBackend(handle.shard(shards=1), params=p)
+    # duplicate edge: two copies live after one extra insert
+    s0, d0 = handle.to_host_edges()
+    e = (np.array([s0[0]], np.int32), np.array([d0[0]], np.int32))
+    assert be.apply_ops(*e, True).all()
+    assert be.apply_ops(*e, False).all()   # removes ONE copy
+    assert be.apply_ops(*e, False).all()   # removes the second
+    assert not be.apply_ops(*e, False).any()  # absent now: unapplied
+    assert not be.overflow  # absent deletes are not overflow
+
+
+def test_sharded_delete_one_copy_per_pair_per_batch(handle):
+    """Duplicate pairs inside ONE batch delete a single copy (the
+    apply_update_batch contract) — only the first op reports applied."""
+    p = make_params(handle.n, c=0.6, eps_a=0.2, delta=0.01)
+    be = ShardedBackend(handle.shard(shards=1), params=p)
+    s0, d0 = handle.to_host_edges()
+    e = (np.array([s0[0]], np.int32), np.array([d0[0]], np.int32))
+    assert be.apply_ops(*e, True).all()  # two live copies now
+    dup = (np.array([s0[0], s0[0]], np.int32),
+           np.array([d0[0], d0[0]], np.int32))
+    mask = be.apply_ops(*dup, False)
+    assert mask.tolist() == [True, False]
+    # exactly one copy left
+    assert be.apply_ops(*e, False).all()
+    assert not be.apply_ops(*e, False).any()
+
+
+def test_sharded_overflow_sticky_and_regrow(handle):
+    p = make_params(handle.n, c=0.6, eps_a=0.2, delta=0.01)
+    m = handle.num_edges
+    state = ShardedGraphState(*handle.to_host_edges(), handle.n,
+                             shards=1, capacity_per_shard=m)
+    be = ShardedBackend(state, params=p)
+    mask = be.apply_ops(np.array([0, 1], np.int32),
+                        np.array([1, 0], np.int32), True)
+    assert not mask.any() and be.overflow
+    assert be.version == handle.version  # nothing applied: no bump
+    be.regrow()
+    assert not be.overflow
+    assert state.capacity_per_shard >= 2 * m
+    assert be.apply_ops(np.array([0, 1], np.int32),
+                        np.array([1, 0], np.int32), True).all()
+
+
+def test_session_sharded_single_shard_end_to_end(handle):
+    sess = SimRankSession(handle, seed=0, top_k=5, backend="sharded",
+                          shards=1, walk_chunk=128)
+    env = sess.query(QuerySpec(kind="topk", node=3, budget_walks=128))
+    assert env.variant == "sharded[spmd]"
+    assert env.topk_nodes.shape == (5,)
+    assert 3 not in env.topk_nodes.tolist()
+    rep = sess.update(inserts=(np.array([0, 1]), np.array([2, 3])))
+    assert rep.applied == 2 and sess.version == 1
+    t = sess.submit(QuerySpec(kind="single_source", node=1,
+                              budget_walks=128))
+    env2 = t.result()
+    assert env2.version == 1
+    assert env2.scores.shape == (handle.n,)
+    with pytest.raises(NotImplementedError):
+        sess.epoch(queries=[1])
+    with pytest.raises(ValueError):
+        sess.query(QuerySpec(kind="topk", node=1, variant="tree"))
+
+
+def test_sharded_rejects_bad_geometry(handle):
+    p = make_params(handle.n, c=0.6, eps_a=0.2, delta=0.01)
+    with pytest.raises(ValueError, match="divisible"):
+        ShardedBackend(handle.shard(shards=3), params=p)  # 1 device
+    with pytest.raises(ValueError, match="probe"):
+        ShardedBackend(handle.shard(shards=1), params=p, probe="nope")
+    with pytest.raises(ValueError, match="use_kernel"):
+        ShardedBackend(handle.shard(shards=1), params=p, use_kernel=True)
+    with pytest.raises(ValueError, match="model"):
+        from repro.utils.jaxcompat import make_mesh
+
+        ShardedBackend(handle.shard(shards=1), params=p,
+                       mesh=make_mesh((1,), ("data",)))
+
+
+def test_session_rejects_stray_backend_args(handle):
+    with pytest.raises(ValueError, match="sharded"):
+        SimRankSession(handle, shards=8)  # forgot backend="sharded"
+    p = make_params(handle.n, c=0.6, eps_a=0.2, delta=0.01)
+    be = LocalBackend(handle.copy(), params=p)
+    with pytest.raises(ValueError, match="geometry"):
+        SimRankSession(be, shards=2)  # instance already carries geometry
+    with pytest.raises(ValueError, match="not both"):
+        SimRankSession(LocalBackend(handle.copy(), params=p),
+                       backend="sharded")
+    with pytest.raises(ValueError, match="own graph state"):
+        # the positional handle would be silently shadowed
+        SimRankSession(handle, backend=LocalBackend(handle.copy(), params=p))
+
+
+def test_sharded_odd_edge_chunks_pad_cleanly(handle):
+    """edge_chunks that don't divide the 1024 padding floor must still
+    produce a probe-compatible m_pad."""
+    p = make_params(handle.n, c=0.6, eps_a=0.2, delta=0.01)
+    be = ShardedBackend(handle.shard(shards=1), params=p,
+                        walk_chunk=64, edge_chunks=3)
+    est, _, _ = be.serve_batch(
+        "single_source", [3], jnp.stack([jax.random.key(0)]), n_r=64
+    )
+    assert est.shape == (1, handle.n)
+
+
+def test_sharded_infers_shards_from_mesh(handle):
+    """mesh= without shards= sizes the partition from the model extent."""
+    from repro.utils.jaxcompat import make_mesh
+
+    p = make_params(handle.n, c=0.6, eps_a=0.2, delta=0.01)
+    mesh = make_mesh((1, 1), ("data", "model"))
+    be = ShardedBackend(handle, params=p, mesh=mesh)
+    assert be.state.shards == 1 and be.mesh is mesh
+
+
+def test_backend_instance_session_never_owns_buffers(handle):
+    """A caller-supplied backend's handle was not copied — epoch() (which
+    donates the mirror buffers) must refuse rather than invalidate the
+    caller's arrays."""
+    p = make_params(handle.n, c=0.6, eps_a=0.2, delta=0.01)
+    be = LocalBackend(handle, params=p)
+    sess = SimRankSession(be)
+    with pytest.raises(ValueError, match="owned graph"):
+        sess.epoch(queries=[1])
+
+
+# ---------------------------------------------------------------------------
+# Mesh parity on 8 fake XLA host devices (subprocess: XLA_FLAGS first)
+# ---------------------------------------------------------------------------
+
+_MESH_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np
+import jax, jax.numpy as jnp
+from repro.api import GraphHandle, QuerySpec, SimRankSession
+from repro.api.backend import ShardedBackend, ShardedGraphState
+from repro.graph import powerlaw_graph
+
+src, dst, n = powerlaw_graph(120, 900, seed=5)
+in_deg = np.bincount(dst, minlength=n)
+h = GraphHandle.from_edges(src, dst, n, capacity=len(src) + 256,
+                           k_max=int(in_deg.max()) + 8)
+BUDGET = 8192
+local = SimRankSession(h, seed=0, top_k=5, walk_chunk=512)
+shard = SimRankSession(h, seed=0, top_k=5, walk_chunk=512,
+                       backend="sharded", shards=4)
+assert len(jax.devices()) == 8
+nodes = [int(u) for u in np.where(in_deg > 0)[0][:2]]
+for u in nodes:
+    key = jax.random.key(100 + u)
+    el = local.query(QuerySpec(kind="single_source", node=u,
+                               budget_walks=BUDGET, key=key,
+                               variant="telescoped"))
+    es = shard.query(QuerySpec(kind="single_source", node=u,
+                               budget_walks=BUDGET, key=key))
+    a, b = el.scores.copy(), es.scores.copy()
+    a[u] = b[u] = 0.0  # different draws: tolerance-based comparison
+    assert np.abs(a - b).max() < 0.03, (u, np.abs(a - b).max())
+    assert np.abs(a - b).mean() < 0.004, (u, np.abs(a - b).mean())
+    tl = local.query(QuerySpec(kind="topk", node=u, k=5,
+                               budget_walks=BUDGET, key=key,
+                               variant="telescoped"))
+    ts = shard.query(QuerySpec(kind="topk", node=u, k=5,
+                               budget_walks=BUDGET, key=key))
+    assert len(set(tl.topk_nodes.tolist())
+               & set(ts.topk_nodes.tolist())) >= 3, u
+
+# ring probe == spmd probe (same CSR sampler stream => near-identical)
+ring = SimRankSession(h, seed=0, top_k=5, walk_chunk=512,
+                      backend="sharded", shards=4,
+                      backend_options=dict(probe="ring"))
+key = jax.random.key(42)
+es = shard.query(QuerySpec(kind="single_source", node=nodes[0],
+                           budget_walks=1024, key=key))
+er = ring.query(QuerySpec(kind="single_source", node=nodes[0],
+                          budget_walks=1024, key=key))
+assert er.variant == "sharded[ring]"
+assert np.abs(es.scores - er.scores).max() < 1e-4
+
+# sharded update -> query == rebuild-and-query (exact)
+rng = np.random.default_rng(3)
+shard.update(inserts=(rng.integers(0, n, 64).astype(np.int32),
+                      rng.integers(0, n, 64).astype(np.int32)),
+             deletes=(src[:16], dst[:16]))
+assert shard.version == 2
+s2, d2 = shard.backend.to_host_edges()
+reb = ShardedBackend(ShardedGraphState(s2, d2, n, shards=4,
+                                       version=shard.version),
+                     params=shard.params, walk_chunk=512)
+k = jnp.stack([jax.random.key(7)])
+a, _, _ = shard.backend.serve_batch("single_source", [nodes[0]], k, n_r=512)
+b, _, _ = reb.serve_batch("single_source", [nodes[0]], k, n_r=512)
+assert np.array_equal(a, b)
+print("BACKEND_PARITY_OK")
+"""
+
+
+def test_sharded_backend_parity_on_fake_mesh():
+    """ShardedBackend (spmd + ring) vs LocalBackend on 8 fake XLA host
+    devices: tolerance-based score/topk parity, plus the exact
+    sharded-update -> query == rebuild-and-query invariant."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    out = subprocess.run(
+        [sys.executable, "-c", _MESH_SCRIPT],
+        capture_output=True, text=True, env=env,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        timeout=420,
+    )
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "BACKEND_PARITY_OK" in out.stdout

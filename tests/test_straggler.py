@@ -1,0 +1,152 @@
+"""serving.straggler: deadline + retry-with-shedding dispatch policies.
+
+These are host-side wrappers around arbitrary query callables; the tests
+drive them with plain functions (controllable latency) plus one
+integration case through the public session stats API (``record_retry``)
+that launch/serve.py's ``on_retry`` hook uses.
+"""
+import time
+
+import numpy as np
+import pytest
+
+from repro.serving.straggler import (
+    DeadlineError,
+    HedgePolicy,
+    dispatch,
+    run_with_deadline,
+)
+
+
+def test_run_with_deadline_returns_result():
+    assert run_with_deadline(lambda x: x + 1, 41, deadline_s=5.0) == 42
+
+
+def test_run_with_deadline_raises_on_miss():
+    with pytest.raises(DeadlineError):
+        run_with_deadline(lambda: time.sleep(2.0), deadline_s=0.05)
+
+
+def test_run_with_deadline_propagates_worker_exception():
+    def boom():
+        raise RuntimeError("worker died")
+
+    with pytest.raises(RuntimeError, match="worker died"):
+        run_with_deadline(boom, deadline_s=5.0)
+
+
+def test_dispatch_injects_budget_on_first_attempt():
+    seen = {}
+
+    def fn(**kwargs):
+        seen.update(kwargs)
+        return "ok"
+
+    out = dispatch(fn, policy=HedgePolicy(deadline_s=5.0), budget=128)
+    assert out == "ok"
+    assert seen == {"budget_walks": 128}
+
+
+def test_dispatch_no_budget_passthrough():
+    """budget=None must not inject a budget kwarg at all — full-accuracy
+    dispatch stays the callable's default."""
+    seen = {"called": 0}
+
+    def fn(**kwargs):
+        seen["called"] += 1
+        assert "budget_walks" not in kwargs
+        return "ok"
+
+    assert dispatch(fn, policy=HedgePolicy(deadline_s=5.0)) == "ok"
+    assert seen["called"] == 1
+
+
+def test_dispatch_sheds_budget_per_retry():
+    """Each deadline miss retries with budget * shed_factor (anytime
+    degradation), and the on_retry hook sees every re-dispatch."""
+    budgets: list[int] = []
+    retries: list[int] = []
+
+    def fn(budget_walks=None):
+        budgets.append(budget_walks)
+        if budget_walks > 100:  # "too slow" until the budget is shed
+            time.sleep(1.0)
+        return budget_walks
+
+    out = dispatch(
+        fn,
+        policy=HedgePolicy(deadline_s=0.25, max_retries=3, shed_factor=0.5),
+        budget=400,
+        on_retry=retries.append,
+    )
+    assert out == 100  # 400 -> 200 -> 100 served within deadline
+    assert budgets == [400, 200, 100]
+    assert retries == [1, 2]
+
+
+def test_dispatch_raises_after_retry_budget_exhausted():
+    calls = {"n": 0}
+
+    def fn(budget_walks=None):
+        calls["n"] += 1
+        time.sleep(1.0)
+
+    with pytest.raises(DeadlineError):
+        dispatch(
+            fn,
+            policy=HedgePolicy(deadline_s=0.1, max_retries=2, shed_factor=0.5),
+            budget=64,
+        )
+    assert calls["n"] == 3  # initial + max_retries re-dispatches
+
+
+def test_dispatch_budget_floor_is_one():
+    """Shedding never drives the injected budget below 1 walk."""
+    budgets: list[int] = []
+
+    def fn(budget_walks=None):
+        budgets.append(budget_walks)
+        if len(budgets) < 3:
+            time.sleep(1.0)
+        return budget_walks
+
+    out = dispatch(
+        fn,
+        policy=HedgePolicy(deadline_s=0.2, max_retries=4, shed_factor=0.1),
+        budget=2,
+    )
+    assert out == 1
+    assert budgets == [2, 1, 1]  # max(1, int(...)) floor per attempt
+
+
+def test_retries_reported_through_session_stats_api(toy):
+    """The serve-launcher wiring: on_retry -> session.record_retry, the
+    public path into backend-owned EngineStats."""
+    from repro.api import GraphHandle, SimRankSession
+
+    sess = SimRankSession(
+        GraphHandle(g=toy["g"], eg=toy["eg"]), eps_a=0.3, top_k=3
+    )
+
+    def flaky(spec, budget_walks=None):
+        if budget_walks > 16:
+            time.sleep(1.0)
+        return sess.query(spec, budget_walks=budget_walks)
+
+    from repro.api import QuerySpec
+
+    # pre-warm both budget shapes so the deadline measures the injected
+    # sleep, not CPU compile time
+    sess.query(QuerySpec(kind="topk", node=0, k=3), budget_walks=32)
+    sess.query(QuerySpec(kind="topk", node=0, k=3), budget_walks=16)
+    res = dispatch(
+        flaky, QuerySpec(kind="topk", node=0, k=3),
+        policy=HedgePolicy(deadline_s=0.6, max_retries=2, shed_factor=0.5),
+        budget=32,
+        on_retry=lambda attempt: sess.record_retry(),
+    )
+    assert sess.stats.retries == 1
+    assert res.walks_used == 16
+    assert len(np.asarray(res.topk_nodes)) == 3
+    with pytest.raises(ValueError):
+        sess.record_retry(-1)
