@@ -10,8 +10,19 @@ graph ``version`` it was computed against plus the Thm-1 error bound at
 the walk budget actually spent, and capacity overflow auto-regrows the
 buffers without losing updates.
 
+The epoch is a Backend stage (core/epoch.py): ``--backend sharded``
+runs the SAME loop with the updates applied inside a shard_map step
+against device-resident shard buffers and the probe telescoped over the
+mesh in the same compiled program — pair with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` for a fake
+multi-device CPU run.
+
 Run:  PYTHONPATH=src python examples/dynamic_graph_serving.py
+      PYTHONPATH=src python examples/dynamic_graph_serving.py \
+          --backend sharded --shards 1
 """
+import argparse
+
 import numpy as np
 
 from repro.api import GraphHandle, SimRankSession
@@ -19,8 +30,18 @@ from repro.graph import powerlaw_graph
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--backend", choices=("local", "sharded"),
+                    default="local")
+    ap.add_argument("--shards", type=int, default=None,
+                    help="row-partition count for --backend sharded "
+                         "(default: local device count)")
+    args = ap.parse_args()
+
     rng = np.random.default_rng(0)
-    src, dst, n = powerlaw_graph(5_000, 60_000, seed=0, max_deg=512)
+    quick = args.backend == "sharded"  # CI runs the mesh loop small
+    n_nodes, n_edges = (1_000, 12_000) if quick else (5_000, 60_000)
+    src, dst, n = powerlaw_graph(n_nodes, n_edges, seed=0, max_deg=512)
     in_deg = np.bincount(dst, minlength=n)
     handle = GraphHandle.from_edges(
         src, dst, n,
@@ -30,10 +51,12 @@ def main():
     sess = SimRankSession(
         handle, c=0.6, eps_a=0.1, top_k=10,
         batch_q=4, update_batch=64, walk_chunk=256, seed=0,
+        backend=args.backend, shards=args.shards,
     )
     print(f"graph n={n} m={len(src)}; n_r={sess.params.n_r} walks/query; "
           f"epoch = {sess.update_batch} update ops + "
-          f"{sess.batch_q} queries, one compiled dispatch")
+          f"{sess.batch_q} queries, one compiled dispatch; "
+          f"backend={sess.backend.name}")
 
     queries = rng.choice(np.where(in_deg > 0)[0], 12)
     for i in range(3):

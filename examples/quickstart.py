@@ -91,6 +91,14 @@ def main():
            for i, s in zip(env.topk_nodes, env.topk_scores)])
     ssess.update(inserts=([5], [0]))  # shard-wise apply, no index rebuild
     assert ssess.version == 1
+    # epoch() runs on the mesh too: the update applies inside a shard_map
+    # step against device-resident shard buffers, and the probe telescopes
+    # in the same compiled program (core/epoch.py)
+    ep = ssess.epoch(inserts=([5], [1]), queries=[0], budget_walks=512)
+    assert ep.version == 2 and ep.results[0].version == 2
+    print(f"mesh epoch: {ep.updates_applied} update + "
+          f"{len(ep.results)} query in one compiled dispatch "
+          f"({ep.results[0].variant})")
 
 
 if __name__ == "__main__":

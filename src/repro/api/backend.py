@@ -52,10 +52,19 @@ from jax.sharding import PartitionSpec as P
 
 from repro.api.handle import GraphHandle
 from repro.api.spec import QuerySpec
+from repro.core.epoch import (
+    build_shard_epoch_graph,
+    epoch_step,
+    make_sharded_epoch_step,
+)
 from repro.core.multisource import multi_source, multi_source_topk
 from repro.core.params import ProbeSimParams
 from repro.core.probesim import single_source, topk
-from repro.graph.dynamic import make_update_batch
+from repro.graph.dynamic import (
+    UpdateBatch,
+    apply_update_batch_jit,
+    make_update_batch,
+)
 from repro.graph.partition import pad_to_multiple, partition_ops_by_dst
 from repro.utils.jaxcompat import make_mesh, set_mesh, specs_to_shardings
 
@@ -81,6 +90,14 @@ class Backend(Protocol):
     ``GraphHandle.apply_batch`` semantics: an unapplied insert means
     capacity overflow (sticky ``overflow``, recover via ``regrow``), an
     unapplied delete means the edge was absent.
+
+    Backends that set ``supports_epoch`` additionally implement the fused
+    epoch stage (``core.epoch``): ``epoch_batch`` applies one padded
+    ``UpdateBatch`` and serves one query batch in a single compiled
+    dispatch (zero host transfers in between) and ``own_buffers`` makes
+    the backend's graph state exclusively owned (deep copy) — the session
+    calls it at construction so donated epoch steps can never invalidate
+    caller-held buffers.
     """
 
     name: str
@@ -100,6 +117,8 @@ class Backend(Protocol):
 
     def dispatch_label(self, variant: str) -> str: ...
 
+    def epoch_dispatch_label(self) -> str: ...
+
     def serve_one(
         self, spec: QuerySpec, key, *, variant: str, n_r: int
     ) -> dict: ...
@@ -115,6 +134,20 @@ class Backend(Protocol):
     def regrow(self, **kwargs) -> None: ...
 
     def to_host_edges(self) -> tuple[np.ndarray, np.ndarray]: ...
+
+    def own_buffers(self) -> None: ...
+
+    def epoch_batch(
+        self,
+        batch: UpdateBatch,
+        us,
+        keys,
+        *,
+        n_r: int,
+        top_k: int,
+        lanes: int | None = None,
+        use_kernel: bool | None = None,
+    ) -> tuple: ...
 
 
 # ---------------------------------------------------------------------------
@@ -174,6 +207,10 @@ class LocalBackend:
     def dispatch_label(self, variant: str) -> str:
         """Envelope ``variant`` field: the legacy variant, verbatim."""
         return variant
+
+    def epoch_dispatch_label(self) -> str:
+        """Envelope ``variant`` for epoch results (the fused local path)."""
+        return "telescoped"
 
     def to_host_edges(self) -> tuple[np.ndarray, np.ndarray]:
         return self.handle.to_host_edges()
@@ -238,6 +275,61 @@ class LocalBackend:
 
     def regrow(self, **kwargs) -> None:
         self.handle.regrow(**kwargs)
+
+    # -- fused epochs --------------------------------------------------------
+
+    def own_buffers(self) -> None:
+        """Deep-copy the handle so donated epoch steps touch no caller arrays."""
+        self.handle = self.handle.copy()
+
+    def epoch_batch(
+        self,
+        batch: UpdateBatch,
+        us,
+        keys,
+        *,
+        n_r: int,
+        top_k: int,
+        lanes: int | None = None,
+        use_kernel: bool | None = None,
+    ) -> tuple:
+        """One fused local epoch: ``core.epoch.epoch_step`` over the owned
+        mirrors (donated; the handle is replaced with the post-epoch
+        snapshot).  ``us=None`` runs the update-only variant.  Returns
+        ``(applied [B], est, idx, vals)`` as host arrays (est for
+        ``top_k == 0``, idx/vals otherwise; the unused side is None).
+        """
+        h = self.handle
+        if us is None:
+            g2, eg2, applied = apply_update_batch_jit(h.g, h.eg, batch)
+            h.g, h.eg = g2, eg2
+            return np.asarray(applied), None, None, None
+        p = self.params
+        q = len(us)
+        acc = jnp.zeros((q, h.n), jnp.float32)
+        g2, eg2, applied, est, idx, vals = epoch_step(
+            h.g, h.eg, batch, keys, jnp.asarray(us, jnp.int32), acc,
+            n_r=n_r,
+            lanes_q=max(1, (lanes or self.walk_chunk) // q),
+            max_len=p.max_len,
+            sqrt_c=p.sqrt_c,
+            eps_p=p.eps_p,
+            eps_t=p.eps_t,
+            truncation_shift=p.truncation_shift,
+            use_kernel=(
+                self.use_kernel if use_kernel is None else use_kernel
+            ),
+            top_k=top_k,
+        )
+        if top_k:
+            idx = np.asarray(idx)  # device sync (materializes g2/eg2)
+            vals = np.asarray(vals)
+            est = None
+        else:
+            est = np.asarray(est)
+            idx = vals = None
+        h.g, h.eg = g2, eg2
+        return np.asarray(applied), est, idx, vals
 
 
 # ---------------------------------------------------------------------------
@@ -309,6 +401,9 @@ class ShardedGraphState:
         self.version = int(version)
         self.overflow = False
         self._device = None  # (ShardedGraph, RingGraph | None) cache
+        # bumped on every buffer/geometry mutation; the epoch path keys
+        # its carried device mirror on it (stale counter => rebuild)
+        self.mutations = 0
 
     # -- snapshot ------------------------------------------------------------
 
@@ -338,6 +433,21 @@ class ShardedGraphState:
     def host_in_degrees(self) -> np.ndarray:
         _, dst = self.to_host_edges()
         return np.bincount(dst, minlength=self.n)[: self.n]
+
+    def copy(self) -> "ShardedGraphState":
+        """Deep copy (buffers nobody else references).
+
+        ``to_host_edges`` is shard-major per-shard-FIFO, the fixpoint of
+        the partitioner, so the copy's buffers are bit-identical.
+        """
+        st = ShardedGraphState(
+            *self.to_host_edges(), self.n,
+            shards=self.shards,
+            capacity_per_shard=self.capacity_per_shard,
+            version=self.version,
+        )
+        st.overflow = self.overflow
+        return st
 
     # -- shard-wise updates --------------------------------------------------
 
@@ -399,7 +509,83 @@ class ShardedGraphState:
         if applied.any():
             self.version += 1  # once per batch that changed the graph
             self._device = None
+            self.mutations += 1
         return applied
+
+    def replay_applied(
+        self,
+        src: np.ndarray,
+        dst: np.ndarray,
+        insert: np.ndarray,
+        applied: np.ndarray,
+    ) -> None:
+        """Mirror a device-applied epoch batch into the host buffers.
+
+        The mesh epoch step applies updates on device
+        (``core.epoch._shard_apply``); this replays its per-op decisions —
+        applied deletes first (first live FIFO match per op), then applied
+        inserts (append in stream order) — so the host buffers stay
+        bit-identical to the carried device state without re-deriving the
+        room checks.  ``version`` advances once iff anything applied; the
+        caller folds the device overflow flag into the sticky host flag.
+        """
+        src = np.asarray(src).astype(np.int64, copy=False)
+        dst = np.asarray(dst).astype(np.int64, copy=False)
+        insert = np.asarray(insert, bool)
+        applied = np.asarray(applied, bool)
+        if not applied.any():
+            return
+        for i in np.where(applied & ~insert)[0]:
+            s, d = int(src[i]), int(dst[i])
+            sh = d // self.rows
+            c = int(self._counts[sh])
+            hit = np.where(
+                (self._src_sh[sh, :c] == s) & (self._dst_sh[sh, :c] == d)
+            )[0]
+            if not len(hit):  # device said applied: the edge was live
+                raise RuntimeError(
+                    f"epoch replay: delete ({s}, {d}) not found on host "
+                    f"shard {sh} — device/host state diverged"
+                )
+            j = int(hit[0])
+            self._src_sh[sh, j : c - 1] = self._src_sh[sh, j + 1 : c].copy()
+            self._dst_sh[sh, j : c - 1] = self._dst_sh[sh, j + 1 : c].copy()
+            self._src_sh[sh, c - 1] = -1
+            self._dst_sh[sh, c - 1] = -1
+            self._counts[sh] -= 1
+        for i in np.where(applied & insert)[0]:
+            s, d = int(src[i]), int(dst[i])
+            sh = d // self.rows
+            c = int(self._counts[sh])
+            if c >= self.capacity_per_shard:
+                raise RuntimeError(
+                    f"epoch replay: shard {sh} full on host but the device "
+                    "applied an insert — device/host state diverged"
+                )
+            self._src_sh[sh, c] = s
+            self._dst_sh[sh, c] = d
+            self._counts[sh] += 1
+        self.version += 1
+        self._device = None
+        self.mutations += 1
+
+    def ensure_capacity(self, capacity_per_shard: int) -> None:
+        """Grow per-shard buffers to at least ``capacity_per_shard``.
+
+        Unlike :meth:`regrow` this is pure headroom bookkeeping: it never
+        clears ``overflow`` and never touches ``version`` (the epoch path
+        uses it to round capacity up to the probe's edge-chunk multiple).
+        """
+        new_cap = int(capacity_per_shard)
+        if new_cap <= self.capacity_per_shard:
+            return
+        grown_s = np.full((self.shards, new_cap), -1, dtype=np.int32)
+        grown_d = np.full((self.shards, new_cap), -1, dtype=np.int32)
+        grown_s[:, : self.capacity_per_shard] = self._src_sh
+        grown_d[:, : self.capacity_per_shard] = self._dst_sh
+        self._src_sh, self._dst_sh = grown_s, grown_d
+        self._device = None
+        self.mutations += 1
 
     def regrow(self, *, capacity_per_shard: int | None = None,
                growth: float = 2.0) -> None:
@@ -411,12 +597,7 @@ class ShardedGraphState:
                    self.capacity_per_shard + 1)
         )
         if new_cap > self.capacity_per_shard:
-            grown_s = np.full((self.shards, new_cap), -1, dtype=np.int32)
-            grown_d = np.full((self.shards, new_cap), -1, dtype=np.int32)
-            grown_s[:, : self.capacity_per_shard] = self._src_sh
-            grown_d[:, : self.capacity_per_shard] = self._dst_sh
-            self._src_sh, self._dst_sh = grown_s, grown_d
-            self._device = None
+            self.ensure_capacity(new_cap)
         self.overflow = False
 
     # -- device mirrors ------------------------------------------------------
@@ -482,13 +663,22 @@ class ShardedBackend:
     The epilogue (1/n_r, truncation shift, diagonal fix, top-k) matches
     the local path's conventions so results are tolerance-comparable.
 
-    The fused update->query epoch is not offered here
-    (``supports_epoch=False``): its donated-buffer contract is a
-    single-device optimization with no mesh analogue yet.
+    The fused update->query epoch runs on the mesh too
+    (``supports_epoch=True``): ``epoch_batch`` drives
+    ``core.epoch.make_sharded_epoch_step`` — a carried device-resident
+    :class:`~repro.core.epoch.ShardEpochGraph` (dst-sharded COO buffers +
+    row-sharded ELL mirror) is updated inside a shard_map step and probed
+    by the distributed telescoped push in the same compiled program, with
+    no host transfer between update and query.  The host
+    ``ShardedGraphState`` stays authoritative by replaying the applied
+    mask (``replay_applied``) after each epoch; any host-path mutation
+    (``apply_ops``/``regrow``) invalidates the carried mirror, which is
+    rebuilt from host on the next epoch — bit-identical to the carried
+    state by the stable-FIFO invariant.
     """
 
     name = "sharded"
-    supports_epoch = False
+    supports_epoch = True
     variants = ("auto", "telescoped")
 
     def __init__(
@@ -547,6 +737,11 @@ class ShardedBackend:
             )
         self.mesh = mesh
         self._steps: dict = {}  # (Q, B) -> compiled chunk step
+        # the carried device-resident epoch mirror (ShardEpochGraph) and
+        # the host-state mutation counter it was last synced against
+        self._epoch_graph = None
+        self._epoch_sync = -1
+        self._epoch_steps: dict = {}  # config -> compiled epoch step
 
     # -- snapshot state ------------------------------------------------------
 
@@ -568,6 +763,13 @@ class ShardedBackend:
     def dispatch_label(self, variant: str) -> str:
         """Envelope ``variant`` field: records the mesh path that served."""
         return f"sharded[{self.probe}]"
+
+    def epoch_dispatch_label(self) -> str:
+        """Epoch envelopes record the path that actually served: the mesh
+        epoch always telescopes through the spmd push (the ring layout's
+        2-D edge buckets have no incremental maintenance yet — ROADMAP),
+        so a ``probe="ring"`` backend must not stamp ring on epochs."""
+        return "sharded[spmd]"
 
     def to_host_edges(self) -> tuple[np.ndarray, np.ndarray]:
         return self.state.to_host_edges()
@@ -599,6 +801,110 @@ class ShardedBackend:
             )
         self.state.regrow(**kwargs)
 
+    # -- fused epochs (device-resident shard buffers) ------------------------
+
+    def own_buffers(self) -> None:
+        """Deep-copy the graph state so epochs never mutate caller buffers."""
+        self.state = self.state.copy()
+        self._epoch_graph = None
+        self._epoch_sync = -1
+
+    def _epoch_graph_state(self):
+        """The carried device epoch mirror, rebuilt when host state moved.
+
+        Rebuild sizes the per-shard capacity up to the probe's edge-chunk
+        multiple (growing the host buffers to match, so device and host
+        room checks agree) and the ELL width to the current max in-degree
+        plus headroom — an ELL-full insert therefore reports unapplied,
+        sets overflow, and the session's regrow/retry loop makes progress
+        on the rebuilt (wider) mirror.
+        """
+        if (
+            self._epoch_graph is not None
+            and self._epoch_sync == self.state.mutations
+        ):
+            return self._epoch_graph
+        E = pad_to_multiple(
+            max(self.state.capacity_per_shard, self.edge_chunks),
+            self.edge_chunks,
+        )
+        self.state.ensure_capacity(E)
+        # materialize the edge list ONCE — it feeds both the k_max sizing
+        # and the builder (to_host_edges is an O(m) concatenation)
+        src, dst = self.state.to_host_edges()
+        deg_cap = (
+            int(np.bincount(dst, minlength=self.state.n).max())
+            if len(dst) else 0
+        )
+        st = build_shard_epoch_graph(
+            src, dst, self.state.n,
+            shards=self.state.shards,
+            capacity_per_shard=self.state.capacity_per_shard,
+            k_max=max(deg_cap + 8, 16),
+        )
+        self._epoch_graph = st
+        self._epoch_sync = self.state.mutations
+        return st
+
+    def epoch_batch(
+        self,
+        batch: UpdateBatch,
+        us,
+        keys,
+        *,
+        n_r: int,
+        top_k: int,
+        lanes: int | None = None,
+        use_kernel: bool | None = None,
+    ) -> tuple:
+        """One fused MESH epoch: shard_map update apply + distributed probe
+        in a single compiled dispatch against the carried device mirror
+        (donated per shard; no host transfer between update and query).
+        The applied mask is replayed into the host ``ShardedGraphState``
+        afterwards, keeping ``to_host_edges``/``version``/serving mirrors
+        coherent.  Same return contract as ``LocalBackend.epoch_batch``.
+        """
+        st = self._epoch_graph_state()
+        q = 0 if us is None else len(us)
+        cfg = (
+            q, n_r if q else 0, top_k if q else 0,
+            bool(batch.has_deletes), st.capacity, st.k_max,
+        )
+        step = self._epoch_steps.get(cfg)
+        if step is None:
+            p = self.params
+            step = make_sharded_epoch_step(
+                st, self.mesh,
+                q=q, n_r=n_r if q else 1, top_k=top_k,
+                max_len=p.max_len, sqrt_c=p.sqrt_c, eps_p=p.eps_p,
+                eps_t=p.eps_t, truncation_shift=p.truncation_shift,
+                walk_chunk=self.walk_chunk, edge_chunks=self.edge_chunks,
+                has_deletes=bool(batch.has_deletes),
+            )
+            self._epoch_steps[cfg] = step
+        # host copies of the op stream BEFORE the dispatch (the replay
+        # below must not read donated device buffers)
+        b_src = np.asarray(batch.src)
+        b_dst = np.asarray(batch.dst)
+        b_ins = np.asarray(batch.insert)
+        with set_mesh(self.mesh):
+            if q:
+                out = step(st, batch, jnp.asarray(us, jnp.int32), keys)
+            else:
+                out = step(st, batch)
+        st2, applied, overflow, est, idx, vals = out
+        applied = np.asarray(applied)
+        self.state.replay_applied(b_src, b_dst, b_ins, applied)
+        if bool(np.asarray(overflow)):
+            self.state.overflow = True
+        self._epoch_graph = st2
+        self._epoch_sync = self.state.mutations
+        if top_k and q:
+            return applied, None, np.asarray(idx), np.asarray(vals)
+        if q:
+            return applied, np.asarray(est), None, None
+        return applied, None, None, None
+
     # -- queries -------------------------------------------------------------
 
     def serve_one(self, spec: QuerySpec, key, *, variant: str, n_r: int) -> dict:
@@ -629,12 +935,21 @@ class ShardedBackend:
         chunk_i = 0
         while done < n_r:
             b = min(self.walk_chunk, n_r - done)
-            step = self._chunk_step(q, b, sg, rg)
+            # ring walk columns shard over the data axes, whose extent must
+            # divide Q*b; remainder/odd chunks fall back to the spmd probe
+            # for that chunk (same sampler stream, same telescoped math —
+            # the two probes agree to float summation order), so
+            # probe="ring" composes with arbitrary batch/budget sizes
+            # instead of erroring
+            probe = self.probe
+            if probe == "ring" and (q * b) % self._data_extent():
+                probe = "spmd"
+            step = self._chunk_step(q, b, sg, rg, probe=probe)
             chunk_keys = jax.vmap(
                 lambda kq: jax.random.fold_in(kq, chunk_i)
             )(keys)
             with set_mesh(self.mesh):
-                part = step(rg if self.probe == "ring" else sg,
+                part = step(rg if probe == "ring" else sg,
                             us_dev, chunk_keys)
             acc += np.asarray(part, np.float64)[:, : self.n]
             done += b
@@ -652,19 +967,29 @@ class ShardedBackend:
         vals = np.take_along_axis(masked, idx, axis=1)
         return None, idx.astype(np.int32), vals.astype(np.float32)
 
-    def _chunk_step(self, q: int, b: int, sg, rg):
+    def _data_extent(self) -> int:
+        """Product of the mesh extents walk columns shard over."""
+        extent = 1
+        for a in ("pod", "data"):
+            if a in self.mesh.axis_names:
+                extent *= int(self.mesh.shape[a])
+        return extent
+
+    def _chunk_step(self, q: int, b: int, sg, rg, *, probe: str):
         """Compiled mesh step: (graph, us [Q], keys [Q]) -> counts [Q, n_pad].
 
         One step samples ``b`` walks per query (each query from its own
         folded stream) and probes all ``Q*b`` walk columns through the
-        distributed telescoped push; compiled once per (Q, b, graph
-        capacity band) shape.
+        distributed telescoped push; compiled once per (Q, b, probe, graph
+        capacity band) shape.  ``probe`` is per-chunk: ring serving hands
+        remainder chunks whose column count the data extent doesn't divide
+        to the spmd step (see ``serve_batch``).
         """
         shape_band = (
-            (rg.n_pad, rg.src_sh.shape) if self.probe == "ring"
+            (rg.n_pad, rg.src_sh.shape) if probe == "ring"
             else (sg.n_pad, sg.m_pad)
         )
-        cache_key = (q, b, self.probe, shape_band)
+        cache_key = (q, b, probe, shape_band)
         if cache_key in self._steps:
             return self._steps[cache_key]
         from repro.core.distributed import (
@@ -678,7 +1003,7 @@ class ShardedBackend:
         max_len = p.max_len
         eps_p = p.eps_p
         edge_chunks = self.edge_chunks
-        use_ring = self.probe == "ring"
+        use_ring = probe == "ring"
 
         def step(graph, us, keys):
             def sample_one(kq, u):

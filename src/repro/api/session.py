@@ -38,7 +38,10 @@ Execution is pluggable (repro.api.backend): the session owns specs, PRNG
 streams, queues/tickets, stats and envelopes, and dispatches through a
 ``Backend`` — ``LocalBackend`` (the single-device fused path above,
 bit-identical to the pre-backend session) or ``ShardedBackend`` (the
-same contract over a device mesh; ``epoch`` is local-only).
+same contract over a device mesh).  The fused epoch is a Backend stage
+too (``core.epoch``): local epochs donate the session-owned mirror pair,
+mesh epochs update device-resident shard buffers inside a shard_map step
+— both with zero host transfers between update and query.
 
 The §4.4 "best of both worlds" switch lives in the session *planner*
 (:meth:`plan`): ``variant='auto'`` picks the deterministic prefix-tree
@@ -58,7 +61,6 @@ import time
 import warnings
 from collections import deque
 from dataclasses import dataclass, field
-from functools import partial
 
 import numpy as np
 
@@ -68,14 +70,11 @@ import jax.numpy as jnp
 from repro.api.backend import Backend, LocalBackend, ShardedBackend
 from repro.api.handle import GraphHandle
 from repro.api.spec import QuerySpec, ResultEnvelope, as_spec
-from repro.core.multisource import fused_serve_impl
+from repro.core.epoch import epoch_step  # noqa: F401  (re-exported: the
+#   fused local epoch step now lives in core/epoch.py; legacy importers —
+#   serving.dynamic_engine among them — keep finding it here)
 from repro.core.params import ProbeSimParams, abs_error_bound, make_params
-from repro.graph.dynamic import (
-    UpdateBatch,
-    apply_update_batch,
-    apply_update_batch_jit,
-    make_update_batch,
-)
+from repro.graph.dynamic import UpdateBatch, make_update_batch
 
 Array = jax.Array
 
@@ -165,67 +164,6 @@ class EpochResult:
     latency_s: float = 0.0
 
 
-@partial(
-    jax.jit,
-    static_argnames=(
-        "n_r",
-        "lanes_q",
-        "max_len",
-        "sqrt_c",
-        "eps_p",
-        "eps_t",
-        "truncation_shift",
-        "use_kernel",
-        "top_k",
-    ),
-    # g/eg are donated so the update scan writes the graph buffers in place
-    # (backends that support donation) instead of copying capacity-sized
-    # arrays every epoch — the session owns its graph state (own-copied at
-    # construction) and always replaces it with the returned g'/eg'
-    donate_argnames=("acc", "g", "eg"),
-)
-def epoch_step(
-    g,
-    eg,
-    batch: UpdateBatch,
-    keys: Array,  # [Q] typed PRNG keys, one stream per query
-    us: Array,  # int32 [Q]
-    acc: Array,  # f32 [Q, n] donated accumulator
-    *,
-    n_r: int,
-    lanes_q: int,
-    max_len: int,
-    sqrt_c: float,
-    eps_p: float,
-    eps_t: float,
-    truncation_shift: bool,
-    use_kernel: bool,
-    top_k: int,
-):
-    """One fused epoch: apply the update batch, then serve the query batch.
-
-    Everything happens inside one compiled step on device — the query probe
-    reads the graph buffers the update scan just wrote, with no host
-    round-trip in between.  Returns ``(g', eg', applied, est, idx, vals)``
-    (``idx``/``vals`` are None when ``top_k == 0``); ``g'.version`` /
-    ``g'.overflow`` carry the snapshot id and capacity signal.
-    """
-    g2, eg2, applied = apply_update_batch(g, eg, batch)
-    acc, est, idx, vals = fused_serve_impl(
-        keys, g2, eg2, us, acc,
-        n_r=n_r,
-        lanes_q=lanes_q,
-        max_len=max_len,
-        sqrt_c=sqrt_c,
-        eps_p=eps_p,
-        eps_t=eps_t,
-        truncation_shift=truncation_shift,
-        use_kernel=use_kernel,
-        top_k=top_k,
-    )
-    return g2, eg2, applied, est, idx, vals
-
-
 def _occurrence_numbers(src: np.ndarray, dst: np.ndarray, n: int) -> np.ndarray:
     """occ[i] = #{j < i : (src[j], dst[j]) == (src[i], dst[i])}, vectorized.
 
@@ -256,7 +194,9 @@ class SimRankSession:
     (:class:`repro.api.backend.ShardedBackend`: dst-partitioned shards,
     distributed probe, shard-wise updates; size the mesh with ``shards=``
     / ``mesh=``).  A ready-made :class:`Backend` instance can be passed
-    directly as the first argument instead of a handle.
+    directly as the first argument instead of a handle; if it advertises
+    the epoch stage (``supports_epoch``), the session asks it to own-copy
+    its graph state at construction so fused epochs stay donation-safe.
 
     ``walk_chunk`` is the total lane-column width of the fused serve step
     (per-query walk-chunk width on the sharded backend); ``batch_q`` the
@@ -373,12 +313,20 @@ class SimRankSession:
                     "its geometry — construct it with those options"
                 )
             self.backend = backend
+            # capability detection: a backend advertising the epoch stage
+            # (supports_epoch + epoch_batch) gets epochs even though the
+            # caller built it — the session asks it to own-copy its graph
+            # state NOW, so the donating epoch steps can never invalidate
+            # buffers the caller still holds.  Backends without the stage
+            # stay read-shared and epoch() refuses.
+            if getattr(backend, "supports_epoch", False) and hasattr(
+                backend, "own_buffers"
+            ):
+                backend.own_buffers()
+                self._owns_graph = True
+            else:
+                self._owns_graph = False
             self.handle = getattr(backend, "handle", None)
-            # a caller-supplied backend brought its own graph state; the
-            # session did NOT copy it, so it must never claim the exclusive
-            # buffer ownership the donating epoch step requires (construct
-            # from a handle with backend="local" for epoch support)
-            self._owns_graph = False
             # adopt the backend's error-budget accounting when it has one,
             # so envelopes report the bound the executing substrate uses
             self.params = getattr(backend, "params", None) or make_params(
@@ -799,19 +747,21 @@ class SimRankSession:
         batch application — no point paying the fused probe for discarded
         dummy queries.
         """
-        if not self.backend.supports_epoch:
-            # the fused epoch's donated-buffer contract is a single-device
-            # optimization; on other backends run update() + drain()
+        if not getattr(self.backend, "supports_epoch", False) or not hasattr(
+            self.backend, "epoch_batch"
+        ):
+            # capability detection: the epoch is a Backend-protocol stage
+            # now — a backend that doesn't implement it gets update() +
+            # drain() instead of a fused step
             raise NotImplementedError(
-                f"the {self.backend.name!r} backend does not support the "
-                "fused epoch step; apply update() and drain() separately"
+                f"the {self.backend.name!r} backend does not implement "
+                "epoch_batch; apply update() and drain() separately"
             )
         if not self._owns_graph:
-            # epoch_step DONATES the mirror buffers; on a shared handle that
-            # would invalidate every other reference to them (CPU ignores
-            # donation, so this would pass tests and corrupt in production).
-            # Sessions over a caller-supplied Backend instance never own the
-            # buffers (the session did not copy them) and land here too.
+            # the epoch step DONATES graph buffers; with own_graph=False
+            # the caller kept the handle authoritative and shares its
+            # arrays with the session (CPU ignores donation, so this would
+            # pass tests and corrupt in production)
             raise ValueError(
                 "epoch() requires an owned graph: construct the session "
                 "from a GraphHandle with own_graph=True (the default)"
@@ -831,36 +781,23 @@ class SimRankSession:
             live_q, qs, spec0 = self._pop_epoch_queries()
             n_r = spec0.budget_walks or budget_walks or p.n_r
             tk = spec0.k if spec0.kind == "topk" else 0
-            us = jnp.asarray([item[0].node for item in qs], jnp.int32)
+            us = [item[0].node for item in qs]
             keys = jnp.stack([item[1] for item in qs])
-            acc = jnp.zeros((self.batch_q, self.handle.n), jnp.float32)
-            g2, eg2, applied, est, idx, vals = epoch_step(
-                self.handle.g, self.handle.eg, batch, keys, us, acc,
-                n_r=n_r,
-                lanes_q=max(1, self.walk_chunk // self.batch_q),
-                max_len=p.max_len,
-                sqrt_c=p.sqrt_c,
-                eps_p=p.eps_p,
-                eps_t=p.eps_t,
-                truncation_shift=p.truncation_shift,
-                use_kernel=self.use_kernel,
-                top_k=tk,
+            applied, est, idx, vals = self.backend.epoch_batch(
+                batch, us, keys,
+                n_r=n_r, top_k=tk,
+                lanes=self.walk_chunk, use_kernel=self.use_kernel,
             )
-            if tk:
-                idx = np.asarray(idx)  # device sync (materializes g2/eg2)
-                vals = np.asarray(vals)
-                est = None
-            else:
-                est = np.asarray(est)
         else:
             live_q, qs, spec0 = 0, [], None
             n_r = budget_walks or p.n_r
-            g2, eg2, applied = apply_update_batch_jit(
-                self.handle.g, self.handle.eg, batch
+            applied, est, idx, vals = self.backend.epoch_batch(
+                batch, None, None,
+                n_r=n_r, top_k=0,
+                lanes=self.walk_chunk, use_kernel=self.use_kernel,
             )
         applied = np.asarray(applied)[: len(ops)]
         dt = time.time() - t0
-        self.handle.g, self.handle.eg = g2, eg2
 
         version = self.version
         overflow = self.overflow
@@ -879,6 +816,7 @@ class SimRankSession:
             regrown = True
 
         bound = self.error_bound(n_r)
+        variant = self.backend.epoch_dispatch_label()
         results = [
             ResultEnvelope(
                 kind=spec0.kind,
@@ -890,7 +828,7 @@ class SimRankSession:
                 latency_s=dt,
                 version=version,
                 error_bound=bound,
-                variant="telescoped",
+                variant=variant,
             )
             for i, item in enumerate(qs[:live_q])
         ]

@@ -7,6 +7,8 @@ Public API:
     multi_source_topk   fused batched top-k (Def. 2)
     topk                approximate top-k SimRank (Def. 2)
     sample_walks        sqrt(c)-walk generation (Def. 3)
+    epoch_step          fused update->query epoch, local stage (core/epoch.py)
+    make_sharded_epoch_step  the mesh epoch: shard_map apply + distributed probe
     simrank_power       ground-truth Power Method (small graphs)
     mc_single_source    Monte Carlo baseline
     tsf_single_source   TSF baseline
@@ -20,6 +22,14 @@ from repro.core.power import (
     simrank_power,
     simrank_power_host,
     simrank_truncated_single_source,
+)
+from repro.core.epoch import (
+    ShardEpochGraph,
+    build_shard_epoch_graph,
+    epoch_pipeline,
+    epoch_step,
+    make_sharded_epoch_step,
+    shard_epoch_specs,
 )
 from repro.core.probe import (
     estimate_walk_reference,
@@ -62,4 +72,10 @@ __all__ = [
     "probe_tree_levels",
     "estimate_walk_reference",
     "push_level",
+    "epoch_pipeline",
+    "epoch_step",
+    "ShardEpochGraph",
+    "build_shard_epoch_graph",
+    "shard_epoch_specs",
+    "make_sharded_epoch_step",
 ]

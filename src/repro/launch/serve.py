@@ -11,11 +11,16 @@ pair with ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` for a
 fake multi-device CPU run).  Updates then apply shard-wise — same
 version/overflow semantics, no index rebuild either way.
 
+``--epochs`` fuses each update burst WITH its query into one compiled
+epoch dispatch (``SimRankSession.epoch``, zero host transfers between
+update and query) — on the sharded backend the updates apply inside a
+shard_map step against device-resident shard buffers (core/epoch.py).
+
 Usage:
   python -m repro.launch.serve --nodes 20000 --edges 200000 --queries 20 \
       --updates-per-batch 100 --eps-a 0.1
   XLA_FLAGS=--xla_force_host_platform_device_count=8 \
-      python -m repro.launch.serve --backend sharded --shards 4
+      python -m repro.launch.serve --backend sharded --shards 4 --epochs
 """
 from __future__ import annotations
 
@@ -45,6 +50,9 @@ def main() -> None:
     ap.add_argument("--shards", type=int, default=None,
                     help="row-partition count for --backend sharded "
                          "(default: local device count)")
+    ap.add_argument("--epochs", action="store_true",
+                    help="serve each update burst + query as ONE fused "
+                         "epoch dispatch instead of update() + query()")
     args = ap.parse_args()
 
     from repro.graph import powerlaw_graph
@@ -65,11 +73,13 @@ def main() -> None:
     sess = SimRankSession(
         handle, c=args.c, eps_a=args.eps_a, top_k=args.top_k, seed=args.seed,
         backend=args.backend, shards=shards,
+        batch_q=1, update_batch=args.updates_per_batch,
     )
     print(f"graph: n={n} m={len(src)}; n_r={sess.params.n_r} walks/query "
           f"(eps_a={args.eps_a}), max_len={sess.params.max_len}; "
           f"backend={sess.backend.name}"
-          + (f" shards={shards}" if args.backend == "sharded" else ""))
+          + (f" shards={shards}" if args.backend == "sharded" else "")
+          + (" [fused epochs]" if args.epochs else ""))
 
     query_nodes = rng.choice(np.where(in_deg > 0)[0], size=args.queries)
     lat = []
@@ -77,6 +87,25 @@ def main() -> None:
         # interleave a dynamic update batch — no index rebuild
         ins_src = rng.integers(0, n, args.updates_per_batch).astype(np.int32)
         ins_dst = rng.integers(0, n, args.updates_per_batch).astype(np.int32)
+
+        if args.epochs:
+            # ONE fused dispatch: apply the burst + serve the query on the
+            # post-update snapshot (device-resident on either backend)
+            ep = sess.epoch(
+                inserts=(ins_src, ins_dst),
+                queries=[QuerySpec(kind="topk", node=int(u),
+                                   budget_walks=args.walk_budget)],
+            )
+            res = ep.results[0]
+            lat.append(ep.latency_s)
+            top3 = ", ".join(
+                f"{nn}:{s:.4f}" for nn, s in
+                zip(res.topk_nodes[:3], res.topk_scores[:3])
+            )
+            print(f"q{i} u={u}: epoch({ep.updates_applied} edges + query)"
+                  f"={ep.latency_s:.2f}s v{res.version} top3=[{top3}]")
+            continue
+
         t0 = time.time()
         upd = sess.update(inserts=(ins_src, ins_dst))
         upd_t = time.time() - t0

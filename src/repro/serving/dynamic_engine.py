@@ -1,12 +1,15 @@
 """DEPRECATED: ``DynamicEngine`` is a thin shim over ``repro.api``.
 
 The session API absorbs the fused update->query epoch path: the jitted
-``epoch_step`` and the epoch loop (batch cutting, overflow requeue,
-auto-regrow) now live in ``repro.api.session``; ``SimRankSession.epoch``
-is the one entrypoint for "apply an update batch and serve a query batch
-in a single compiled dispatch".  This module remains so existing callers
-keep working; it delegates to an owned session and is bit-identical to the
-pre-session engine under the same PRNG seed.
+``epoch_step`` is the local stage of the backend-agnostic epoch pipeline
+in ``repro.core.epoch`` (re-exported through ``repro.api.session`` for
+legacy importers), and the epoch loop (batch cutting, overflow requeue,
+auto-regrow) lives in ``repro.api.session``; ``SimRankSession.epoch`` is
+the one entrypoint for "apply an update batch and serve a query batch in
+a single compiled dispatch" — on any backend that implements the stage.
+This module remains so existing callers keep working; it delegates to an
+owned session and is bit-identical to the pre-session engine under the
+same PRNG seed.
 
 Migration:
 

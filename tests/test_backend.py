@@ -229,8 +229,17 @@ def test_session_sharded_single_shard_end_to_end(handle):
     env2 = t.result()
     assert env2.version == 1
     assert env2.scores.shape == (handle.n,)
-    with pytest.raises(NotImplementedError):
-        sess.epoch(queries=[1])
+    # the fused epoch is a backend stage now: it runs on the mesh too
+    ep = sess.epoch(inserts=(np.array([2]), np.array([4])),
+                    queries=[QuerySpec(kind="topk", node=3)],
+                    budget_walks=64)
+    assert ep.version == 2 and ep.updates_applied == 1
+    assert ep.results[0].variant == "sharded[spmd]"
+    assert ep.results[0].topk_nodes.shape == (5,)
+    # the serve path sees the epoch's updates (host state replayed)
+    env3 = sess.query(QuerySpec(kind="single_source", node=1,
+                                budget_walks=128))
+    assert env3.version == 2
     with pytest.raises(ValueError):
         sess.query(QuerySpec(kind="topk", node=1, variant="tree"))
 
@@ -287,15 +296,161 @@ def test_sharded_infers_shards_from_mesh(handle):
     assert be.state.shards == 1 and be.mesh is mesh
 
 
-def test_backend_instance_session_never_owns_buffers(handle):
-    """A caller-supplied backend's handle was not copied — epoch() (which
-    donates the mirror buffers) must refuse rather than invalidate the
-    caller's arrays."""
+def test_backend_instance_session_owns_copy_for_epochs(handle):
+    """A backend advertising the epoch stage gets epochs even when the
+    caller built it: the session asks it to own-copy its graph state at
+    construction, so donated epoch steps never touch the caller's
+    arrays (capability detection replaced the old blanket refusal)."""
     p = make_params(handle.n, c=0.6, eps_a=0.2, delta=0.01)
     be = LocalBackend(handle, params=p)
+    g_src_before = np.asarray(handle.g.src).copy()
+    eg_before = np.asarray(handle.eg.in_nbrs).copy()
     sess = SimRankSession(be)
-    with pytest.raises(ValueError, match="owned graph"):
+    assert be.handle is not handle  # own-copied at construction
+    ep = sess.epoch(inserts=(np.array([0]), np.array([1])),
+                    queries=[1], budget_walks=32)
+    assert ep.updates_applied == 1 and sess.version == 1
+    # the caller's handle (and the arrays under it) are untouched
+    np.testing.assert_array_equal(np.asarray(handle.g.src), g_src_before)
+    np.testing.assert_array_equal(np.asarray(handle.eg.in_nbrs), eg_before)
+    assert handle.version == 0
+
+
+def test_epoch_capability_detection_refuses_without_stage(handle):
+    """A backend without the epoch stage still gets the clear refusal."""
+
+    class NoEpochBackend(LocalBackend):
+        supports_epoch = False
+
+    p = make_params(handle.n, c=0.6, eps_a=0.2, delta=0.01)
+    sess = SimRankSession(NoEpochBackend(handle.copy(), params=p))
+    with pytest.raises(NotImplementedError, match="epoch_batch"):
         sess.epoch(queries=[1])
+
+
+# ---------------------------------------------------------------------------
+# Sharded fused epochs (single shard: runs on the plain CPU test env)
+# ---------------------------------------------------------------------------
+
+
+def _epoch_mirror_equals_rebuild(backend):
+    """The carried device epoch state must be bit-identical to a
+    from-scratch rebuild from the (replayed) host edge list."""
+    from repro.core.epoch import build_shard_epoch_graph
+
+    st = backend._epoch_graph
+    rebuilt = build_shard_epoch_graph(
+        *backend.state.to_host_edges(), backend.state.n,
+        shards=backend.state.shards,
+        capacity_per_shard=st.capacity, k_max=st.k_max,
+    )
+    for f in ("src_sh", "dst_sh", "counts", "in_nbrs", "in_deg"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(st, f)), np.asarray(getattr(rebuilt, f)),
+            err_msg=f"epoch mirror field {f} != rebuild",
+        )
+
+
+def test_sharded_epoch_mirrors_equal_rebuild(handle):
+    """Insert-only then mixed insert/delete epochs through the session:
+    after each, the device-resident shard buffers are bit-identical to a
+    from-scratch rebuild of the updated edge list."""
+    sess = SimRankSession(handle, seed=0, top_k=5, batch_q=2,
+                          update_batch=16, walk_chunk=128,
+                          backend="sharded", shards=1)
+    s0, d0 = handle.to_host_edges()
+    # insert-only epoch (the O(B) append variant)
+    ep = sess.epoch(inserts=(np.array([0, 1, 2]), np.array([3, 4, 5])),
+                    queries=[1, 2], budget_walks=64)
+    assert ep.updates_applied == 3 and ep.version == 1
+    _epoch_mirror_equals_rebuild(sess.backend)
+    # mixed epoch(s) (delete compaction == rebuild); drain_epochs in case
+    # the batch cutter splits at a duplicate-pair conflict
+    sess.queue_update(np.array([6]), np.array([7]))
+    sess.queue_update(s0[:4], d0[:4], insert=False)
+    for u in (1, 2):
+        sess.submit(u)
+    eps = sess.drain_epochs(budget_walks=64)
+    assert sum(e.updates_applied for e in eps) == 5
+    _epoch_mirror_equals_rebuild(sess.backend)
+    assert sess.backend.state.num_edges == len(s0) + 4 - 4
+
+
+def test_sharded_epoch_scores_match_local_under_shared_keys(handle):
+    """Local and sharded epochs draw bit-identical walks under shared
+    keys (same sampler, same ELL rows); scores agree to float summation
+    order of the two probes."""
+    import jax
+
+    key = jax.random.key(123)
+    ins = (np.array([0, 1, 2, 3]), np.array([4, 5, 6, 7]))
+    s0, d0 = handle.to_host_edges()
+
+    def run(backend_kw):
+        sess = SimRankSession(handle, seed=0, top_k=5, batch_q=2,
+                              update_batch=16, walk_chunk=128,
+                              **backend_kw)
+        qs = [QuerySpec(kind="single_source", node=u,
+                        key=jax.random.fold_in(key, u)) for u in (1, 3)]
+        ep = sess.epoch(inserts=ins, deletes=(s0[:2], d0[:2]),
+                        queries=qs, budget_walks=192)
+        return np.stack([r.scores for r in ep.results])
+
+    local = run({})
+    sharded = run(dict(backend="sharded", shards=1))
+    assert np.abs(local - sharded).max() < 1e-4
+
+
+def test_ring_backend_epoch_stamps_spmd_variant(handle):
+    """The mesh epoch always telescopes through the spmd push — a ring
+    backend's epoch envelopes must say so, not claim the ring served."""
+    sess = SimRankSession(handle, seed=0, top_k=5, batch_q=1,
+                          update_batch=8, walk_chunk=64,
+                          backend="sharded", shards=1,
+                          backend_options=dict(probe="ring"))
+    ep = sess.epoch(inserts=(np.array([0]), np.array([1])),
+                    queries=[1], budget_walks=32)
+    assert ep.results[0].variant == "sharded[spmd]"
+    env = sess.query(QuerySpec(kind="topk", node=1, budget_walks=32))
+    assert env.variant == "sharded[ring]"  # serve path still rings
+
+
+def test_sharded_epoch_overflow_regrow_midstream(handle):
+    """A mid-stream capacity overflow inside the fused mesh epoch:
+    skipped inserts are re-queued, the state regrows, and the retry
+    epochs land every op — nothing lost, mirrors still == rebuild."""
+    m = handle.num_edges
+    state = ShardedGraphState(*handle.to_host_edges(), handle.n,
+                              shards=1, capacity_per_shard=m + 2)
+    p = make_params(handle.n, c=0.6, eps_a=0.2, delta=0.01)
+    be = ShardedBackend(state, params=p, walk_chunk=128)
+    sess = SimRankSession(be, seed=0, top_k=5, batch_q=2, update_batch=16)
+    rng = np.random.default_rng(0)
+    sess.queue_update(rng.integers(0, handle.n, 40).astype(np.int32),
+                      rng.integers(0, handle.n, 40).astype(np.int32))
+    eps = sess.drain_epochs(budget_walks=32)
+    assert any(e.regrown for e in eps)
+    assert sum(e.updates_applied for e in eps) == 40
+    assert be.state.num_edges == m + 40
+    assert not sess.overflow  # regrow cleared the sticky flag
+    _epoch_mirror_equals_rebuild(be)
+
+
+def test_sharded_epoch_then_host_update_stays_coherent(handle):
+    """Interleaving host-path updates (update()) with fused epochs must
+    invalidate and rebuild the carried device mirror — queries after the
+    mix see every op exactly once."""
+    sess = SimRankSession(handle, seed=0, top_k=5, batch_q=2,
+                          update_batch=16, walk_chunk=128,
+                          backend="sharded", shards=1)
+    sess.epoch(inserts=(np.array([0]), np.array([1])), budget_walks=32)
+    rep = sess.update(inserts=(np.array([2]), np.array([3])))
+    assert rep.applied == 1
+    ep = sess.epoch(inserts=(np.array([4]), np.array([5])),
+                    queries=[1], budget_walks=64)
+    assert ep.version == 3
+    assert sess.backend.state.num_edges == handle.num_edges + 3
+    _epoch_mirror_equals_rebuild(sess.backend)
 
 
 # ---------------------------------------------------------------------------
@@ -366,21 +521,111 @@ k = jnp.stack([jax.random.key(7)])
 a, _, _ = shard.backend.serve_batch("single_source", [nodes[0]], k, n_r=512)
 b, _, _ = reb.serve_batch("single_source", [nodes[0]], k, n_r=512)
 assert np.array_equal(a, b)
+
+# ring probe with a non-divisible column count: budget 65 at walk_chunk 64
+# leaves a remainder chunk of ONE column, which the data axes (extent 2)
+# do not divide — the per-chunk spmd fallback must serve it (previously a
+# shard_map in_specs error), matching all-spmd to 1e-4
+ring_odd = SimRankSession(h, seed=0, top_k=5, walk_chunk=64,
+                          backend="sharded", shards=4,
+                          backend_options=dict(probe="ring"))
+spmd_odd = SimRankSession(h, seed=0, top_k=5, walk_chunk=64,
+                          backend="sharded", shards=4)
+key = jax.random.key(9)
+eo = ring_odd.query(QuerySpec(kind="single_source", node=nodes[0],
+                              budget_walks=65, key=key))
+es = spmd_odd.query(QuerySpec(kind="single_source", node=nodes[0],
+                              budget_walks=65, key=key))
+assert np.abs(eo.scores - es.scores).max() < 1e-4
+print("RING_REMAINDER_OK")
+
+# --- fused mesh epochs on 4 shards --------------------------------------
+from repro.core.epoch import build_shard_epoch_graph
+
+def mirror_equals_rebuild(be):
+    st = be._epoch_graph
+    rebuilt = build_shard_epoch_graph(
+        *be.state.to_host_edges(), be.state.n, shards=be.state.shards,
+        capacity_per_shard=st.capacity, k_max=st.k_max)
+    for f in ("src_sh", "dst_sh", "counts", "in_nbrs", "in_deg"):
+        assert np.array_equal(np.asarray(getattr(st, f)),
+                              np.asarray(getattr(rebuilt, f))), f
+
+h2 = GraphHandle.from_edges(src, dst, n, capacity=len(src) + 256,
+                            k_max=int(in_deg.max()) + 8)
+eloc = SimRankSession(h2, seed=0, top_k=5, batch_q=2, update_batch=16,
+                      walk_chunk=256)
+eshd = SimRankSession(h2, seed=0, top_k=5, batch_q=2, update_batch=16,
+                      walk_chunk=256, backend="sharded", shards=4)
+ekey = jax.random.key(55)
+ins = (rng.integers(0, n, 8).astype(np.int32),
+       rng.integers(0, n, 8).astype(np.int32))
+# insert-only epoch, shared per-query keys => bit-identical walks
+qs_l = [QuerySpec(kind="single_source", node=u,
+                  key=jax.random.fold_in(ekey, u)) for u in nodes[:2]]
+qs_s = [QuerySpec(kind="single_source", node=u,
+                  key=jax.random.fold_in(ekey, u)) for u in nodes[:2]]
+el = eloc.epoch(inserts=ins, queries=qs_l, budget_walks=256)
+es = eshd.epoch(inserts=ins, queries=qs_s, budget_walks=256)
+assert el.updates_applied == es.updates_applied == 8
+assert eshd.version == 1
+la = np.stack([r.scores for r in el.results])
+sa = np.stack([r.scores for r in es.results])
+assert np.abs(la - sa).max() < 1e-3, np.abs(la - sa).max()
+mirror_equals_rebuild(eshd.backend)
+# mixed insert/delete epoch: device delete compaction == rebuild, bitwise
+ins2 = (rng.integers(0, n, 4).astype(np.int32),
+        rng.integers(0, n, 4).astype(np.int32))
+el = eloc.epoch(inserts=ins2, deletes=(src[16:24], dst[16:24]),
+                queries=[QuerySpec(kind="topk", node=nodes[0], k=5)],
+                budget_walks=128)
+es = eshd.epoch(inserts=ins2, deletes=(src[16:24], dst[16:24]),
+                queries=[QuerySpec(kind="topk", node=nodes[0], k=5)],
+                budget_walks=128)
+assert el.updates_applied == es.updates_applied
+assert len(set(el.results[0].topk_nodes.tolist())
+           & set(es.results[0].topk_nodes.tolist())) >= 3
+mirror_equals_rebuild(eshd.backend)
+sl, dl = eloc.handle.to_host_edges()
+ss, ds = eshd.backend.to_host_edges()
+assert sorted(zip(sl.tolist(), dl.tolist())) == sorted(
+    zip(ss.tolist(), ds.tolist()))
+# overflow -> regrow mid-stream (update-only epochs; cheap apply steps)
+m2 = eshd.backend.state.num_edges
+tight = ShardedBackend(
+    ShardedGraphState(*eshd.backend.to_host_edges(), n, shards=4,
+                      capacity_per_shard=eshd.backend.state._counts.max()
+                      + 2),
+    params=eshd.params, walk_chunk=256)
+tsess = SimRankSession(tight, seed=0, top_k=5, batch_q=2, update_batch=16)
+tsess.queue_update(rng.integers(0, n, 40).astype(np.int32),
+                   rng.integers(0, n, 40).astype(np.int32))
+teps = tsess.drain_epochs()
+assert any(e.regrown for e in teps)
+assert sum(e.updates_applied for e in teps) == 40
+assert tight.state.num_edges == m2 + 40 and not tsess.overflow
+mirror_equals_rebuild(tight)
+print("EPOCH_MESH_OK")
 print("BACKEND_PARITY_OK")
 """
 
 
 def test_sharded_backend_parity_on_fake_mesh():
     """ShardedBackend (spmd + ring) vs LocalBackend on 8 fake XLA host
-    devices: tolerance-based score/topk parity, plus the exact
-    sharded-update -> query == rebuild-and-query invariant."""
+    devices: tolerance-based score/topk parity, the exact
+    sharded-update -> query == rebuild-and-query invariant, the ring
+    remainder-chunk regression, and the fused mesh epochs (insert-only,
+    mixed, overflow->regrow; mirrors == rebuild bitwise, scores vs local
+    epochs under shared keys)."""
     env = dict(os.environ)
     env["PYTHONPATH"] = "src"
     out = subprocess.run(
         [sys.executable, "-c", _MESH_SCRIPT],
         capture_output=True, text=True, env=env,
         cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
-        timeout=420,
+        timeout=600,
     )
     assert out.returncode == 0, out.stderr[-2000:]
+    assert "RING_REMAINDER_OK" in out.stdout
+    assert "EPOCH_MESH_OK" in out.stdout
     assert "BACKEND_PARITY_OK" in out.stdout
