@@ -143,49 +143,70 @@ def run(quick: bool = True, backend: str = "local") -> None:
     # both paths consume the IDENTICAL update stream from the identical
     # starting graph (the accumulated hs/hd edge list), so every rep
     # queries the same edge set: the session applies batch r to its owned
-    # mirrors, the baseline rebuilds from the edge list as of batch r
+    # mirrors, the baseline rebuilds from the edge list as of batch r.
+    # The two legs are INTERLEAVED rep-by-rep (epoch r, then rebuild r)
+    # and the headline speedup is the median of the per-rep PAIRED ratios:
+    # sequential whole-leg timing is sensitive to which leg catches a
+    # CPU-frequency / allocator noise burst (30%+ across-run swings on this
+    # suite's sub-second legs flipped the ratio run to run); pairing
+    # cancels the common-mode noise because adjacent reps share it.
     params = make_params(n, c=C, eps_a=0.1, delta=0.01)
     qnodes = [int(u) for u in pick_query_nodes(in_deg, Q, seed=2)]
     h3 = GraphHandle.from_edges(hs, hd, n, capacity=capacity, k_max=k_max)
     sess = SimRankSession(h3, c=C, eps_a=0.1, top_k=TOP_K,
                           batch_q=Q, update_batch=B, seed=0)
-    # warm the compiled epoch step (its batch joins the shared stream)
+    keys = jax.random.split(jax.random.key(3), Q)
+    us = jnp.asarray(qnodes, jnp.int32)
+    # warm BOTH compiled steps (the warmup batch joins the shared stream)
     s, d = fresh_ops(99)
     sess.epoch(inserts=(s, d), queries=qnodes, budget_walks=n_r)
     hs = np.concatenate([hs, s])
     hd = np.concatenate([hd, d])
-    epoch_lat = []
-    snapshots = []
-    for r in range(reps):
+    h_rb = GraphHandle.from_edges(hs, hd, n, capacity=capacity, k_max=k_max)
+    idx, vals = multi_source_topk(None, h_rb.g, h_rb.eg, us, TOP_K, params,
+                                  lanes=256, n_r=n_r, keys=keys)
+    jax.block_until_ready(idx)
+    epoch_lat, rb_e2e, paired = [], [], []
+    reps3 = max(reps, 8)  # the paired ratio wants more draws than the legs
+    for r in range(reps3):
         s, d = fresh_ops(100 + r)
-        ep = sess.epoch(inserts=(s, d), queries=qnodes, budget_walks=n_r)
-        epoch_lat.append(ep.latency_s)
         hs = np.concatenate([hs, s])
         hd = np.concatenate([hd, d])
-        snapshots.append((hs, hd))  # edge list as of this rep's batch
+
+        # rebuild leg against the edge list as of THIS batch, timed
+        # back-to-back with the epoch it pairs against
+        def rebuild_leg():
+            t0 = time.time()
+            h_rb = GraphHandle.from_edges(hs, hd, n, capacity=capacity,
+                                          k_max=k_max)
+            idx, vals = multi_source_topk(None, h_rb.g, h_rb.eg, us, TOP_K,
+                                          params, lanes=256, n_r=n_r,
+                                          keys=keys)
+            jax.block_until_ready((idx, vals))
+            return time.time() - t0
+
+        # alternate the leg order per rep: adjacent legs share any
+        # common-mode noise burst either way, and alternation cancels the
+        # residual ordering bias (allocator/cache state one leg leaves
+        # for the other) that a fixed epoch-first order bakes in
+        if r % 2:
+            rb = rebuild_leg()
+            ep = sess.epoch(inserts=(s, d), queries=qnodes,
+                            budget_walks=n_r)
+        else:
+            ep = sess.epoch(inserts=(s, d), queries=qnodes,
+                            budget_walks=n_r)
+            rb = rebuild_leg()
+        epoch_lat.append(ep.latency_s)
+        rb_e2e.append(rb)
+        paired.append(rb / ep.latency_s)
     epoch_s = _median(epoch_lat)
     emit("dynamic/epoch_update_plus_query", epoch_s * 1e6,
          f"B={B},Q={Q},n_r={n_r},version={sess.version}")
-
-    keys = jax.random.split(jax.random.key(3), Q)
-    us = jnp.asarray(qnodes, jnp.int32)
-    h_rb = GraphHandle.from_edges(*snapshots[0], n, capacity=capacity,
-                                  k_max=k_max)
-    idx, vals = multi_source_topk(None, h_rb.g, h_rb.eg, us, TOP_K, params,
-                                  lanes=256, n_r=n_r, keys=keys)
-    jax.block_until_ready(idx)  # warm the query step
-    rb_e2e = []
-    for hs_r, hd_r in snapshots:
-        t0 = time.time()
-        h_rb = GraphHandle.from_edges(hs_r, hd_r, n, capacity=capacity,
-                                      k_max=k_max)
-        idx, vals = multi_source_topk(None, h_rb.g, h_rb.eg, us, TOP_K, params,
-                                      lanes=256, n_r=n_r, keys=keys)
-        jax.block_until_ready((idx, vals))
-        rb_e2e.append(time.time() - t0)
     rb_e2e_s = _median(rb_e2e)
+    epoch_speedup = _median(paired)
     emit("dynamic/rebuild_plus_query", rb_e2e_s * 1e6,
-         f"vs_epoch={rb_e2e_s / epoch_s:.2f}x")
+         f"paired_speedup={epoch_speedup:.2f}x")
 
     RESULTS["dynamic"] = dict(
         n=n, m=int(m), update_batch=B, q=Q, n_r=n_r, rounds=rounds,
@@ -197,6 +218,12 @@ def run(quick: bool = True, backend: str = "local") -> None:
         freshness_speedup=freshness_speedup,
         epoch_update_plus_query_s=epoch_s,
         rebuild_plus_query_s=rb_e2e_s,
+        # median of per-rep (rebuild+query)/(epoch) ratios — the paired,
+        # order-alternated estimator the interleaved section 3 exists
+        # for.  On the quick config the rebuild cost is <1% of the
+        # query-dominated leg, so parity (~1.0) is the expected value;
+        # the isolated update->queryable advantage is freshness_speedup
+        epoch_vs_rebuild_speedup=epoch_speedup,
         tsf_index_rebuild_s=t_tsf,
         session_stats=sess.stats.as_dict(),
     )

@@ -26,6 +26,9 @@ def main() -> None:
                     help="CPU-quick profile (the default; negates --full)")
     ap.add_argument("--only", default=None,
                     help="comma list: serve,abserror,topk,large,dynamic,kernels")
+    ap.add_argument("--backend", choices=("local", "sharded"), default="local",
+                    help="forwarded to suites that take it (serve, dynamic): "
+                         "'sharded' adds the mesh-backend comparison rows")
     ap.add_argument("--json", default=None,
                     help="machine-readable output path; by default "
                          "BENCH_serve.json is written iff the serve suite ran "
@@ -41,7 +44,7 @@ def main() -> None:
         bench_serve,
         bench_topk,
     )
-    from benchmarks.common import write_json
+    from benchmarks.common import RESULTS, ROWS, write_json
 
     suites = dict(
         serve=bench_serve.run,
@@ -51,12 +54,35 @@ def main() -> None:
         dynamic=bench_dynamic.run,
         kernels=bench_kernels.run,
     )
+    takes_backend = {"serve", "dynamic"}  # suites with a mesh-backend leg
+    structured = {"serve", "dynamic"}  # suites that must fill RESULTS[name]
     chosen = args.only.split(",") if args.only else list(suites)
+    unknown = [name for name in chosen if name not in suites]
+    if unknown:
+        ap.error(f"unknown suite(s): {', '.join(unknown)} "
+                 f"(have: {', '.join(suites)})")
     print("name,us_per_call,derived")
     t0 = time.time()
     for name in chosen:
         print(f"# suite: {name}", file=sys.stderr)
-        suites[name](quick=quick)
+        rows_before = len(ROWS)
+        if name in takes_backend:
+            suites[name](quick=quick, backend=args.backend)
+        else:
+            suites[name](quick=quick)
+        # fail LOUDLY when a requested suite produced nothing: a silently
+        # empty artifact reads as "benchmark ran" to every downstream
+        # consumer (CI gates, acceptance checks) when it did not
+        if len(ROWS) == rows_before:
+            sys.exit(f"suite '{name}' was requested but emitted no rows")
+        if name in structured and name not in RESULTS:
+            sys.exit(f"suite '{name}' was requested but exported no "
+                     f"RESULTS['{name}'] row for its JSON artifact")
+        if (name in structured and args.backend == "sharded"
+                and "backend" not in RESULTS[name]
+                and "sharded" not in RESULTS[name]):
+            sys.exit(f"suite '{name}' ran with --backend sharded but "
+                     "exported no sharded comparison row")
     print(f"# total {time.time() - t0:.1f}s", file=sys.stderr)
     if args.json:
         write_json(args.json, quick=quick, suites=chosen)

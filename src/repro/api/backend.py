@@ -48,14 +48,13 @@ import numpy as np
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
-
 from repro.api.handle import GraphHandle
 from repro.api.spec import QuerySpec
 from repro.core.epoch import (
     build_shard_epoch_graph,
     epoch_step,
     make_sharded_epoch_step,
+    make_sharded_serve_step,
 )
 from repro.core.multisource import multi_source, multi_source_topk
 from repro.core.params import ProbeSimParams
@@ -66,7 +65,7 @@ from repro.graph.dynamic import (
     make_update_batch,
 )
 from repro.graph.partition import pad_to_multiple, partition_ops_by_dst
-from repro.utils.jaxcompat import make_mesh, set_mesh, specs_to_shardings
+from repro.utils.jaxcompat import make_mesh, set_mesh
 
 Array = jax.Array
 
@@ -116,6 +115,8 @@ class Backend(Protocol):
     def host_in_degrees(self) -> np.ndarray: ...
 
     def dispatch_label(self, variant: str) -> str: ...
+
+    def batch_dispatch_label(self, q: int) -> str: ...
 
     def epoch_dispatch_label(self) -> str: ...
 
@@ -207,6 +208,11 @@ class LocalBackend:
     def dispatch_label(self, variant: str) -> str:
         """Envelope ``variant`` field: the legacy variant, verbatim."""
         return variant
+
+    def batch_dispatch_label(self, q: int) -> str:
+        """The fused local step serving a Q-query burst, lane count
+        annotated (mirrors ``ShardedBackend.batch_dispatch_label``)."""
+        return f"local[fused,Q={int(q)}]"
 
     def epoch_dispatch_label(self) -> str:
         """Envelope ``variant`` for epoch results (the fused local path)."""
@@ -655,11 +661,16 @@ class ShardedBackend:
     "model")`` — walk columns shard over ``data``, frontier rows over
     ``model`` (the core/distributed.py layout).
 
-    Serving loops *walk-chunks*: each chunk samples ``<= walk_chunk``
-    walks per query on device (per-query streams via
-    ``fold_in(stream, chunk)``), runs the distributed telescoped probe —
-    auto-partitioned (``probe='spmd'``) or the shard_map ring
-    (``probe='ring'``) — and folds per-query partial counts on host.
+    Serving is *lane-batched*: one compiled step per (Q, n_r, k) samples
+    the whole batch's walk pool off the carried device-resident
+    :class:`~repro.core.epoch.ShardEpochGraph` (the epoch path's mirror,
+    keyed on the host mutation counter — repeated ``drain()`` serving
+    reuses resident device state), runs the compacted telescoped lane
+    probe inside shard_map — all-gather push (``probe='spmd'``) or the
+    double-buffered ring exchange (``probe='ring'``) — and reduces
+    per-query counts + top-k in the same program.  Zero host transfers
+    mid-query; each query owns ``walk_chunk // Q`` lane columns (the
+    local fused path's schedule, shared via ``core.multisource``).
     The epilogue (1/n_r, truncation shift, diagonal fix, top-k) matches
     the local path's conventions so results are tolerance-comparable.
 
@@ -736,7 +747,7 @@ class ShardedBackend:
                 f"shards {state.shards}"
             )
         self.mesh = mesh
-        self._steps: dict = {}  # (Q, B) -> compiled chunk step
+        self._steps: dict = {}  # serve config -> compiled batched step
         # the carried device-resident epoch mirror (ShardEpochGraph) and
         # the host-state mutation counter it was last synced against
         self._epoch_graph = None
@@ -763,6 +774,12 @@ class ShardedBackend:
     def dispatch_label(self, variant: str) -> str:
         """Envelope ``variant`` field: records the mesh path that served."""
         return f"sharded[{self.probe}]"
+
+    def batch_dispatch_label(self, q: int) -> str:
+        """The dispatch label annotated with the batch lane count — names
+        the compiled step that serves a Q-query burst (one executable per
+        (Q, n_r, k, probe, capacity band))."""
+        return f"sharded[{self.probe},Q={int(q)}]"
 
     def epoch_dispatch_label(self) -> str:
         """Epoch envelopes record the path that actually served: the mesh
@@ -919,126 +936,54 @@ class ShardedBackend:
     def serve_batch(
         self, kind: str, us, keys, *, key=None, k: int = 0, n_r: int
     ) -> tuple:
-        """Chunked mesh dispatches + host epilogue; see class docstring."""
+        """ONE lane-batched mesh dispatch per query batch.
+
+        Pooled walk sampling for the whole batch, the compacted telescoped
+        lane probe inside shard_map, per-query reduction + top-k — all in a
+        single compiled step against the carried device-resident
+        :class:`~repro.core.epoch.ShardEpochGraph` (the same mirror the
+        epoch path carries, keyed on the host mutation counter, so repeated
+        ``drain()``/ticket serving reuses resident device state instead of
+        rebuilding from host buffers).  Compiled once per
+        (Q, k, n_r, probe, capacity band); zero host transfers mid-query.
+        """
         us = np.asarray(us, np.int32).reshape(-1)
         q = us.shape[0]
         if keys is None:
             if key is None:
                 raise ValueError("serve_batch needs `key` or per-query `keys`")
             keys = jax.random.split(key, q)  # legacy scalar-key semantics
-        sg, rg = self.state.device_graphs(
-            edge_chunks=self.edge_chunks, want_ring=self.probe == "ring"
-        )
-        us_dev = jnp.asarray(us)
-        acc = np.zeros((q, self.n), np.float64)
-        done = 0
-        chunk_i = 0
-        while done < n_r:
-            b = min(self.walk_chunk, n_r - done)
-            # ring walk columns shard over the data axes, whose extent must
-            # divide Q*b; remainder/odd chunks fall back to the spmd probe
-            # for that chunk (same sampler stream, same telescoped math —
-            # the two probes agree to float summation order), so
-            # probe="ring" composes with arbitrary batch/budget sizes
-            # instead of erroring
-            probe = self.probe
-            if probe == "ring" and (q * b) % self._data_extent():
-                probe = "spmd"
-            step = self._chunk_step(q, b, sg, rg, probe=probe)
-            chunk_keys = jax.vmap(
-                lambda kq: jax.random.fold_in(kq, chunk_i)
-            )(keys)
-            with set_mesh(self.mesh):
-                part = step(rg if probe == "ring" else sg,
-                            us_dev, chunk_keys)
-            acc += np.asarray(part, np.float64)[:, : self.n]
-            done += b
-            chunk_i += 1
-        est = (acc / n_r).astype(np.float32)
-        p = self.params
-        if p.truncation_shift:
-            est = np.where(est > 0, est + p.eps_t / 2, est)
-        est[np.arange(q), us] = 1.0  # same diagonal convention as local
-        if kind == "single_source":
-            return est, None, None
-        masked = est.copy()
-        masked[np.arange(q), us] = -np.inf
-        idx = np.argsort(-masked, axis=1, kind="stable")[:, :k]
-        vals = np.take_along_axis(masked, idx, axis=1)
-        return None, idx.astype(np.int32), vals.astype(np.float32)
-
-    def _data_extent(self) -> int:
-        """Product of the mesh extents walk columns shard over."""
-        extent = 1
-        for a in ("pod", "data"):
-            if a in self.mesh.axis_names:
-                extent *= int(self.mesh.shape[a])
-        return extent
-
-    def _chunk_step(self, q: int, b: int, sg, rg, *, probe: str):
-        """Compiled mesh step: (graph, us [Q], keys [Q]) -> counts [Q, n_pad].
-
-        One step samples ``b`` walks per query (each query from its own
-        folded stream) and probes all ``Q*b`` walk columns through the
-        distributed telescoped push; compiled once per (Q, b, probe, graph
-        capacity band) shape.  ``probe`` is per-chunk: ring serving hands
-        remainder chunks whose column count the data extent doesn't divide
-        to the spmd step (see ``serve_batch``).
-        """
-        shape_band = (
-            (rg.n_pad, rg.src_sh.shape) if probe == "ring"
-            else (sg.n_pad, sg.m_pad)
-        )
-        cache_key = (q, b, probe, shape_band)
-        if cache_key in self._steps:
-            return self._steps[cache_key]
-        from repro.core.distributed import (
-            graph_specs,
-            probe_walks_sharded,
-            sample_walks_sharded,
-        )
-
-        p = self.params
-        sqrt_c = p.sqrt_c
-        max_len = p.max_len
-        eps_p = p.eps_p
-        edge_chunks = self.edge_chunks
-        use_ring = probe == "ring"
-
-        def step(graph, us, keys):
-            def sample_one(kq, u):
-                return sample_walks_sharded(
-                    kq, graph, u[None], walks_per_query=b,
-                    max_len=max_len, sqrt_c=sqrt_c,
-                )  # [b, L]
-
-            walks = jax.vmap(sample_one)(keys, us).reshape(q * b, max_len)
-            if use_ring:
-                from repro.core.ring import probe_walks_ring
-
-                scores = probe_walks_ring(
-                    graph, walks, sqrt_c=sqrt_c, eps_p=eps_p
-                )  # [n_pad, Q*b]
-            else:
-                scores = probe_walks_sharded(
-                    graph, walks, sqrt_c=sqrt_c, eps_p=eps_p,
-                    edge_chunks=edge_chunks,
-                )
-            n_pad = scores.shape[0]
-            return scores.reshape(n_pad, q, b).sum(axis=2).T  # [Q, n_pad]
-
-        with set_mesh(self.mesh):
-            if use_ring:
-                from repro.core.ring import ring_graph_specs
-
-                gspecs = ring_graph_specs(rg)
-            else:
-                gspecs = graph_specs(sg)
-            jitted = jax.jit(
-                step,
-                in_shardings=specs_to_shardings(
-                    (gspecs, P(), P()), mesh=self.mesh
-                ),
+        st = self._epoch_graph_state()
+        wq = max(1, self.walk_chunk // q)
+        ring_args = ()
+        ring_band = None
+        if self.probe == "ring":
+            # ring buckets have no incremental maintenance yet (ROADMAP);
+            # the mutation-keyed device cache rebuilds them lazily
+            _, rg = self.state.device_graphs(
+                edge_chunks=self.edge_chunks, want_ring=True
             )
-        self._steps[cache_key] = jitted
-        return jitted
+            ring_args = (rg.src_sh, rg.dst_sh)
+            ring_band = rg.src_sh.shape
+        cfg = (
+            q, int(k), int(n_r), wq, self.probe,
+            st.capacity, st.k_max, ring_band,
+        )
+        step = self._steps.get(cfg)
+        if step is None:
+            p = self.params
+            step = make_sharded_serve_step(
+                st, self.mesh,
+                q=q, n_r=int(n_r), lanes_q=wq, top_k=int(k),
+                max_len=p.max_len, sqrt_c=p.sqrt_c, eps_p=p.eps_p,
+                eps_t=p.eps_t, truncation_shift=p.truncation_shift,
+                probe=self.probe,
+            )
+            self._steps[cfg] = step
+        with set_mesh(self.mesh):
+            est, idx, vals = step(
+                st, *ring_args, jnp.asarray(us), jnp.asarray(keys)
+            )
+        if kind == "single_source":
+            return np.asarray(est), None, None
+        return None, np.asarray(idx), np.asarray(vals)

@@ -231,6 +231,213 @@ def probe_walks_sharded(
     return scores[:n_pad]
 
 
+# ---------------------------------------------------------------------------
+# Lane-batched distributed probe (compacted schedule inside shard_map)
+# ---------------------------------------------------------------------------
+
+
+def lane_probe_block(
+    push_block,
+    pool: Array,  # int32 [Q*n_r, L] replicated walk pool (sentinel >= n)
+    pool_len: Array,  # int32 [Q*n_r] replicated
+    *,
+    row0,  # traced int32: first global row of this shard's block
+    rows: int,
+    q: int,
+    wq: int,
+    n_r: int,
+    max_len: int,
+    sqrt_c: float,
+    eps_p: float,
+    sentinel: int,
+) -> Array:
+    """Compacted lane probe over ONE row block; returns ``total`` [rows, W].
+
+    The distributed counterpart of ``fused_serve_impl``'s loop: the same
+    shared lane-compaction bookkeeping (``core.multisource``), but the score
+    buffer is this shard's [rows, W] block and injection/exclusion are
+    row-iota compares (elementwise — no cross-shard scatters).  The
+    bookkeeping operands (``pool_len``, cursors, positions) are replicated,
+    so every shard takes the identical trip count and the collectives inside
+    ``push_block`` line up across the mesh.
+
+    ``push_block(scores) -> scores`` performs one renormalized push level
+    over the full graph for this row block (all-gather or ring exchange —
+    the caller owns the collective pattern).  ``sentinel`` is the pool's
+    walk-end marker; the compare against ``rid`` either hits a padding row
+    (whose pushed mass is sliced away by the caller's ``[:n]``) or nothing.
+    """
+    from repro.core.multisource import (
+        lane_columns,
+        lane_continue,
+        lane_deposit_refill,
+        lane_frontier,
+        lane_max_steps,
+        lane_thresholds,
+    )
+
+    w = q * wq
+    _, qid = lane_columns(q, wq)
+    rid = jax.lax.broadcasted_iota(jnp.int32, (rows, w), 0) + row0
+    max_steps = lane_max_steps(n_r, max_len)
+
+    def cond(state):
+        step, pos, widx, next_q, scores, total = state
+        return lane_continue(step, pos, next_q, n_r=n_r, max_steps=max_steps)
+
+    def body(state):
+        step, pos, widx, next_q, scores, total = state
+        pos, widx, next_q, scores, total = lane_deposit_refill(
+            pos, widx, next_q, scores, total, pool_len, qid,
+            q=q, wq=wq, n_r=n_r,
+        )
+        active, u_p, u_prev = lane_frontier(pool, widx, pos, sentinel)
+        scores = scores + (rid == u_p[None, :]).astype(jnp.float32)
+        if eps_p > 0.0:
+            thr = lane_thresholds(pos, sqrt_c=sqrt_c, eps_p=eps_p)
+            scores = jnp.where(scores > thr[None, :], scores, 0.0)
+        scores = push_block(scores)
+        scores = jnp.where(rid == u_prev[None, :], 0.0, scores)
+        pos = jnp.where(active, pos - 1, pos)
+        return step + 1, pos, widx, next_q, scores, total
+
+    state = (
+        jnp.int32(0),
+        jnp.zeros(w, jnp.int32),  # pos: all idle -> first iteration refills
+        jnp.zeros(w, jnp.int32),  # widx
+        jnp.zeros(q, jnp.int32),  # next_q
+        jnp.zeros((rows, w), jnp.float32),  # scores block
+        jnp.zeros((rows, w), jnp.float32),  # total block
+    )
+    step, pos, _, _, scores, total = jax.lax.while_loop(cond, body, state)
+    # safety-net flush (no-op unless max_steps was hit)
+    return total + jnp.where((pos == 1)[None, :], scores, 0.0)
+
+
+def probe_lanes_sharded(
+    src_sh: Array,  # int32 [S, E] global src ids per shard (sentinel n_pad)
+    dst_sh: Array,  # int32 [S, E] global dst ids per shard (sentinel n_pad)
+    counts: Array,  # int32 [S] live edges per shard (prefix of the buffer)
+    w_full: Array,  # f32 [n_pad] sqrt(c)/in_deg renorm weights (0 if deg 0)
+    pool: Array,  # int32 [Q*n_r, L] replicated (sentinel n — ELL sampler)
+    pool_len: Array,  # int32 [Q*n_r] replicated
+    mesh,
+    *,
+    n_pad: int,
+    rows: int,
+    q: int,
+    wq: int,
+    n_r: int,
+    max_len: int,
+    sqrt_c: float,
+    eps_p: float,
+    sentinel: int,
+    edge_chunk: int = 2048,
+) -> Array:
+    """Lane-batched telescoped probe, all-gather push; returns [n_pad, W].
+
+    One fully-manual shard_map program: each model shard runs the compacted
+    lane loop over its own [rows, W] frontier block; a push level all-gathers
+    the frontier once, gathers its resident COO bucket's source rows and
+    segment-sums into its destination rows.  Lane columns are REPLICATED over
+    the data axes (the batch is one program — no per-chunk column sharding,
+    hence no divisibility constraint on Q*W).
+
+    The push walks each shard's bucket in fixed-width slices (width
+    ``max(edge_chunk, E/8)``) with a per-shard dynamic trip count — live edges
+    are a prefix of the buffer (FIFO compaction), so capacity padding and
+    dst-skew headroom cost nothing: total gather/scatter work is the LIVE
+    edge count, not shards x max-bucket capacity.  The dynamic bound is
+    safe under shard_map because no collective sits inside the chunk loop
+    (the all-gather happens once per level, before it); shards with fewer
+    edges simply finish their level sooner.  Sentinel slots inside the last
+    live chunk gather a garbage row but scatter into the dropped segment
+    ``rows`` (their dst is the sentinel), so no zero-row append is needed.
+    """
+    from repro.utils.jaxcompat import shard_map
+
+    # sort each shard's bucket by source id, once per serve call: the push
+    # gathers frontier rows in ascending-address order (cache-line reuse on
+    # the [n_pad, W] gathered table) instead of FIFO-random, and sentinel
+    # slots (src = n_pad) sort to the tail so the live prefix the chunk
+    # loop relies on is preserved.  The carried mirror itself stays FIFO —
+    # this is a derived view inside the compiled step, so epoch-path
+    # bitwise invariants are untouched.
+    perm = jnp.argsort(src_sh, axis=1)
+    src_sh = jnp.take_along_axis(src_sh, perm, axis=1)
+    dst_sh = jnp.take_along_axis(dst_sh, perm, axis=1)
+
+    E = src_sh.shape[1]
+    # edge_chunk is a FLOOR on the slice width, not the width itself: the
+    # chunk loop's job is skipping dead tail slots on skewed shards, and
+    # its granularity only needs to resolve the count skew.  Tiny chunks
+    # are pure overhead (each one re-touches the [rows+1, W] accumulator:
+    # at 1 shard a 2048-wide chunking of a 90k-edge bucket measured 2.3x
+    # slower than one whole-bucket segment_sum), so cap the trip count at
+    # ~8 and let the width grow with the bucket.
+    ch = min(max(edge_chunk, -(-E // 8)), E)
+    e_pad = -(-E // ch) * ch
+    if e_pad != E:
+        fill = jnp.full((src_sh.shape[0], e_pad - E), n_pad, jnp.int32)
+        src_sh = jnp.concatenate([src_sh, fill], axis=1)
+        dst_sh = jnp.concatenate([dst_sh, fill], axis=1)
+
+    def local(src_b, dst_b, cnt_b, w_l, pool_l, plen_l):
+        # src_b/dst_b [1, e_pad]; cnt_b [1]; w_l [rows]; pool replicated
+        me = jax.lax.axis_index("model")
+        row0 = me * rows
+        # clip into the real row range: sentinel srcs read a garbage row
+        # whose message lands in the dropped segment (sentinel dst)
+        sb = src_b[0].clip(0, n_pad - 1)
+        db = (dst_b[0] - row0).clip(0, rows)  # sentinel -> dropped segment
+        n_chunks = (cnt_b[0] + ch - 1) // ch
+
+        def push_block(scores):
+            if rows == n_pad:
+                # one model shard owns every row: the local block IS the
+                # full frontier, and the degenerate all_gather is a pure
+                # [n_pad, W] copy per level — skip it
+                full = scores
+            else:
+                full = jax.lax.all_gather(
+                    scores, "model", axis=0, tiled=True
+                )  # [n_pad, W]
+
+            def chunk(i, acc):
+                s_c = jax.lax.dynamic_slice(sb, (i * ch,), (ch,))
+                d_c = jax.lax.dynamic_slice(db, (i * ch,), (ch,))
+                return acc + jax.ops.segment_sum(
+                    full[s_c], d_c, num_segments=rows + 1
+                )
+
+            acc = jax.lax.fori_loop(
+                0, n_chunks, chunk,
+                jnp.zeros((rows + 1, scores.shape[1]), jnp.float32),
+            )[:rows]
+            return acc * w_l[:, None]
+
+        return lane_probe_block(
+            push_block, pool_l, plen_l,
+            row0=row0, rows=rows, q=q, wq=wq, n_r=n_r,
+            max_len=max_len, sqrt_c=sqrt_c, eps_p=eps_p, sentinel=sentinel,
+        )
+
+    fn = shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(
+            P("model", None), P("model", None), P("model"), P("model"),
+            P(), P(),
+        ),
+        out_specs=P("model", None),
+        # fully manual (same reason as the epoch apply step: leftover auto
+        # axes lower axis_index to a PartitionId old-jax rejects); inputs
+        # and compute replicate over the data axes
+        axis_names=set(mesh.axis_names),
+    )
+    return fn(src_sh, dst_sh, counts, w_full, pool, pool_len)
+
+
 def _row_pad(sg: ShardedGraph) -> int:
     """Extra score rows so (n_pad + pad) stays mesh-divisible; >= 1 so the
     sentinel row n_pad exists."""

@@ -600,3 +600,109 @@ def make_sharded_epoch_step(
         in_shardings=specs_to_shardings(in_specs, mesh=mesh),
         donate_argnums=(0,),
     )
+
+
+# ---------------------------------------------------------------------------
+# Sharded serve step factory — lane-batched distributed serving, one jit
+# ---------------------------------------------------------------------------
+
+
+def make_sharded_serve_step(
+    st: ShardEpochGraph,
+    mesh,
+    *,
+    q: int,
+    n_r: int,
+    lanes_q: int,
+    top_k: int,
+    max_len: int,
+    sqrt_c: float,
+    eps_p: float,
+    eps_t: float,
+    truncation_shift: bool,
+    probe: str = "spmd",
+):
+    """Compile the mesh SERVE step for one (geometry, Q, n_r, k) config.
+
+    ``step(state, us [Q], keys [Q]) -> (est, idx, vals)`` (ring:
+    ``step(state, ring_src, ring_dst, us, keys)``) — pooled walk sampling
+    for the whole query batch off the carried :class:`ShardEpochGraph`'s
+    ELL mirror (bit-identical draws to the local sampler under shared
+    keys), the compacted telescoped lane probe inside shard_map
+    (``probe_lanes_sharded`` / ``probe_lanes_ring``), and the per-query
+    reduction + epilogue + top-k, all in ONE compiled program with zero
+    host transfers mid-query.  The state is NOT donated: serving reuses
+    the resident mirror across calls (``ShardedBackend`` keys it on the
+    host mutation counter).
+
+    Epilogue conventions match ``fused_serve_impl`` exactly, and the lane
+    schedule is the shared ``core.multisource`` bookkeeping — a batched
+    sharded serve therefore equals Q single-query sharded serves bitwise
+    (same ``lanes_q``) and matches the local path to float-summation
+    tolerance.
+    """
+    from repro.core.distributed import probe_lanes_sharded
+    from repro.core.walks import sample_walks_batch
+
+    if probe not in ("spmd", "ring"):
+        raise ValueError(f"probe must be 'spmd' or 'ring', got {probe!r}")
+    n, n_pad, rows, S = st.n, st.n_pad, st.rows, st.shards
+    wq = lanes_q
+
+    def serve(state, ring_src, ring_dst, us, keys):
+        eg_view = EllGraph(
+            in_nbrs=state.in_nbrs[:n],
+            in_deg=state.in_deg[:n],
+            n=n, k_max=st.k_max,
+        )
+        pool = sample_walks_batch(
+            keys, eg_view, us, n_r=n_r, max_len=max_len, sqrt_c=sqrt_c
+        ).reshape(q * n_r, max_len)
+        pool_len = (pool < n).sum(axis=1).astype(jnp.int32)
+        w_full = jnp.where(
+            state.in_deg > 0,
+            sqrt_c / jnp.maximum(state.in_deg.astype(jnp.float32), 1.0),
+            0.0,
+        )
+        if probe == "ring":
+            from repro.core.ring import probe_lanes_ring
+
+            total = probe_lanes_ring(
+                ring_src, ring_dst, w_full, pool, pool_len, mesh,
+                rows=rows, shards=S, q=q, wq=wq, n_r=n_r,
+                max_len=max_len, sqrt_c=sqrt_c, eps_p=eps_p, sentinel=n,
+            )
+        else:
+            total = probe_lanes_sharded(
+                state.src_sh, state.dst_sh, state.counts, w_full,
+                pool, pool_len, mesh,
+                n_pad=n_pad, rows=rows, q=q, wq=wq, n_r=n_r,
+                max_len=max_len, sqrt_c=sqrt_c, eps_p=eps_p, sentinel=n,
+            )  # [n_pad, W]
+        acc = total[:n].reshape(n, q, wq).sum(axis=2).T  # [Q, n]
+        est = acc / n_r
+        if truncation_shift:
+            est = jnp.where(est > 0, est + eps_t / 2, est)
+        est = est.at[jnp.arange(q), us].set(1.0)
+        if top_k > 0:
+            masked = est.at[jnp.arange(q), us].set(-jnp.inf)
+            vals, idx = jax.lax.top_k(masked, top_k)
+            return est, idx, vals
+        return est, None, None
+
+    specs = shard_epoch_specs(st)
+    if probe == "ring":
+        in_specs = (
+            specs, P("model", None, None), P("model", None, None), P(), P(),
+        )
+        return jax.jit(
+            serve, in_shardings=specs_to_shardings(in_specs, mesh=mesh)
+        )
+    in_specs = (specs, P(), P())
+
+    def serve_spmd(state, us, keys):
+        return serve(state, None, None, us, keys)
+
+    return jax.jit(
+        serve_spmd, in_shardings=specs_to_shardings(in_specs, mesh=mesh)
+    )

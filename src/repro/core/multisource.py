@@ -57,6 +57,83 @@ from repro.graph.structs import EllGraph, Graph
 Array = jax.Array
 
 
+# ---------------------------------------------------------------------------
+# Lane-compaction helpers — shared by the local fused serve and the
+# distributed lane probes (core/distributed.py, core/ring.py)
+# ---------------------------------------------------------------------------
+#
+# The compacted schedule is backend-independent bookkeeping: per-lane-column
+# walk positions, pool cursors and refill ranks are tiny replicated vectors,
+# identical whether the score buffer is a single [n + 1, W] array (local) or
+# a [rows, W] row block per mesh shard (distributed).  Keeping ONE set of
+# helpers guarantees the schedules agree step-for-step, which is what makes
+# batched-vs-per-query and sharded-vs-local parity tolerance-boundable by
+# float summation order alone.
+
+
+def lane_columns(q: int, wq: int) -> tuple[Array, Array]:
+    """Column ids [W] and the owning query of each lane column [W]."""
+    cols = jnp.arange(q * wq)
+    return cols, cols // wq
+
+
+def lane_max_steps(n_r: int, max_len: int) -> int:
+    """Safety-net trip bound for the compacted loop (it exits early)."""
+    return n_r * max_len + max_len + 8
+
+
+def lane_continue(step, pos, next_q, *, n_r: int, max_steps: int):
+    """Loop-continue predicate: walks in flight or pools undrained."""
+    return (step < max_steps) & (jnp.any(pos >= 1) | jnp.any(next_q < n_r))
+
+
+def lane_deposit_refill(
+    pos, widx, next_q, scores, total, pool_len, qid, *, q, wq, n_r
+):
+    """Deposit finished columns into ``total`` and refill idle columns.
+
+    ``scores``/``total`` are [rows, W] blocks (any row count — the helpers
+    only touch them columnwise); ``pos``/``widx`` are per-column int32 [W],
+    ``next_q`` the per-query pool cursor [Q].  Refill pulls walks from each
+    query's pool partition in pool order — selection is content-independent,
+    so the estimator stays unbiased.  Returns the updated state tuple.
+    """
+    w = q * wq
+    # 1) deposit finished columns (idle columns hold zeros anyway)
+    fin = pos == 1
+    total = total + jnp.where(fin[None, :], scores, 0.0)
+    scores = jnp.where(fin[None, :], 0.0, scores)
+    pos = jnp.where(fin, 0, pos)
+    # 2) refill idle columns from their query's pool partition
+    idle = (pos == 0).astype(jnp.int32).reshape(q, wq)
+    rank = (jnp.cumsum(idle, axis=1) - idle).reshape(w)
+    take = (pos == 0) & (rank < (n_r - next_q)[qid])
+    new_widx = qid * n_r + jnp.minimum(next_q[qid] + rank, n_r - 1)
+    widx = jnp.where(take, new_widx, widx)
+    pos = jnp.where(take, pool_len[new_widx], pos)
+    next_q = next_q + take.astype(jnp.int32).reshape(q, wq).sum(axis=1)
+    return pos, widx, next_q, scores, total
+
+
+def lane_frontier(pool, widx, pos, sentinel: int):
+    """Per-column frontier for one telescoped level at each column's own
+    position: ``(active, u_p, u_prev)``; inactive columns get ``sentinel``
+    (the local path scatters it into the dump row, the distributed path's
+    row-iota compare never matches it)."""
+    active = pos >= 2
+    u_p = jnp.where(active, pool[widx, jnp.maximum(pos - 1, 0)], sentinel)
+    u_prev = jnp.where(active, pool[widx, jnp.maximum(pos - 2, 0)], sentinel)
+    return active, u_p, u_prev
+
+
+def lane_thresholds(pos, *, sqrt_c: float, eps_p: float):
+    """Per-column prune threshold (pruning rule 2 at the column's level):
+    ``eps_p / sqrt(c)^(pos - 1)`` as [W] f32."""
+    return eps_p * jnp.power(
+        jnp.float32(sqrt_c), (1 - pos).astype(jnp.float32)
+    )
+
+
 def fused_serve_impl(
     keys: Array,  # [Q] typed PRNG keys, one stream per query
     g: Graph | EllGraph,
@@ -83,8 +160,7 @@ def fused_serve_impl(
     q = us.shape[0]
     wq = lanes_q
     w = q * wq
-    cols = jnp.arange(w)
-    qid = cols // wq  # owning query of each lane column
+    cols, qid = lane_columns(q, wq)
 
     # --- walk pool: every walk for every query, one vmapped dispatch -------
     pool = sample_walks_batch(
@@ -97,42 +173,25 @@ def fused_serve_impl(
     # widx (walk id in the flattened pool), next_q (per-query pool cursor).
     # `total` accumulates finished columns; per-query reduction happens once
     # at the end (columns are query-sticky, so lane-block sums separate).
-    max_steps = n_r * max_len + max_len + 8  # safety net; loop exits early
+    max_steps = lane_max_steps(n_r, max_len)
 
     def cond(state):
         step, pos, widx, next_q, scores, total = state
-        return (step < max_steps) & (
-            jnp.any(pos >= 1) | jnp.any(next_q < n_r)
-        )
+        return lane_continue(step, pos, next_q, n_r=n_r, max_steps=max_steps)
 
     def body(state):
         step, pos, widx, next_q, scores, total = state
-        # 1) deposit finished columns (idle columns hold zeros anyway)
-        fin = pos == 1
-        total = total + jnp.where(fin[None, :], scores, 0.0)
-        scores = jnp.where(fin[None, :], 0.0, scores)
-        pos = jnp.where(fin, 0, pos)
-        # 2) refill idle columns from their query's pool partition, in pool
-        #    order (selection is content-independent => estimator unbiased)
-        idle = (pos == 0).astype(jnp.int32).reshape(q, wq)
-        rank = (jnp.cumsum(idle, axis=1) - idle).reshape(w)
-        take = (pos == 0) & (rank < (n_r - next_q)[qid])
-        new_widx = qid * n_r + jnp.minimum(next_q[qid] + rank, n_r - 1)
-        widx = jnp.where(take, new_widx, widx)
-        pos = jnp.where(take, pool_len[new_widx], pos)
-        next_q = next_q + take.astype(jnp.int32).reshape(q, wq).sum(axis=1)
-        # 3) one telescoped level per active column, at its own position
-        active = pos >= 2
-        u_p = jnp.where(active, pool[widx, jnp.maximum(pos - 1, 0)], n)
+        pos, widx, next_q, scores, total = lane_deposit_refill(
+            pos, widx, next_q, scores, total, pool_len, qid,
+            q=q, wq=wq, n_r=n_r,
+        )
+        # one telescoped level per active column, at its own position
+        active, u_p, u_prev = lane_frontier(pool, widx, pos, n)
         scores = scores.at[u_p, cols].add(1.0)  # sentinel -> dump row
         if eps_p > 0.0:
-            # pruning rule 2 with a per-column level: eps_p / sqrt(c)^(pos-1)
-            thr = eps_p * jnp.power(
-                jnp.float32(sqrt_c), (1 - pos).astype(jnp.float32)
-            )
+            thr = lane_thresholds(pos, sqrt_c=sqrt_c, eps_p=eps_p)
             scores = jnp.where(scores > thr[None, :], scores, 0.0)
         scores = push_level_padded(g, scores, sqrt_c, use_kernel=use_kernel)
-        u_prev = jnp.where(active, pool[widx, jnp.maximum(pos - 2, 0)], n)
         scores = scores.at[u_prev, cols].set(0.0)  # exclusion mask
         pos = jnp.where(active, pos - 1, pos)
         return step + 1, pos, widx, next_q, scores, total

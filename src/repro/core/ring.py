@@ -103,6 +103,70 @@ def ring_graph_specs(rg: RingGraph) -> RingGraph:
     )
 
 
+def _ring_push_level(buf, src_l, dst_l, me, *, shards: int, rows: int,
+                     counts_l=None, edge_chunk: int = 2048):
+    """One full frontier pass of the double-buffered ring SpMM.
+
+    ``buf`` [rows, C] is this shard's resident frontier block; per step the
+    resident block's bucket (dst_shard=me, src_block=blk) is gathered and
+    segment-summed into ``acc`` while the block is ppermuted onward — the
+    permute overlaps the next bucket's gather/scatter compute.  Returns the
+    un-renormalized push accumulator [rows, C] in f32 (callers apply the
+    sqrt(c)/in_deg weights).  Shared by the per-level walk probe and the
+    lane-batched serve kernel.
+
+    With ``counts_l`` (int32 [S], live edges per resident bucket) each
+    bucket is walked in ``edge_chunk`` slices with a dynamic trip count, so
+    the rectangular [S, S, E] padding costs nothing: live edges are a
+    prefix of every bucket and sentinel slots inside the last chunk scatter
+    into the dropped segment (their dst is the sentinel ``rows``).  The
+    dynamic bound is safe because the ppermute sits OUTSIDE the chunk loop
+    — the ring stays in lockstep while skewed buckets finish early.
+    """
+    C = buf.shape[1]
+    acc = jnp.zeros((rows, C), jnp.float32)
+    for step in range(shards):
+        blk = (me - step) % shards
+        src_b = jnp.take(src_l[0], blk, axis=0)  # [E]
+        dst_b = jnp.take(dst_l[0], blk, axis=0)
+        if counts_l is None:
+            bufp = jnp.concatenate(
+                [buf, jnp.zeros((1, C), buf.dtype)], axis=0
+            )
+            msgs = bufp[src_b.clip(0, rows)].astype(jnp.float32)
+            acc = acc + jax.ops.segment_sum(
+                msgs, dst_b, num_segments=rows + 1
+            )[:rows]
+        else:
+            ch = min(edge_chunk, src_b.shape[0])
+            sb = src_b.clip(0, rows - 1)  # sentinel -> garbage row, dropped
+            n_chunks = (counts_l[blk] + ch - 1) // ch
+            frontier = buf.astype(jnp.float32)
+
+            def chunk(i, a):
+                s_c = jax.lax.dynamic_slice(sb, (i * ch,), (ch,))
+                d_c = jax.lax.dynamic_slice(dst_b, (i * ch,), (ch,))
+                return a + jax.ops.segment_sum(
+                    frontier[s_c], d_c, num_segments=rows + 1
+                )
+
+            acc = acc + jax.lax.fori_loop(
+                0, n_chunks, chunk, jnp.zeros((rows + 1, C), jnp.float32)
+            )[:rows]
+        if step < shards - 1:
+            # permute raw bits: XLA's algebraic simplifier otherwise
+            # elides the f32->bf16->f32 round-trip and widens the
+            # permute back to f32 (2x wire bytes)
+            perm = [(i, (i + 1) % shards) for i in range(shards)]
+            if buf.dtype == jnp.bfloat16:
+                bits = jax.lax.bitcast_convert_type(buf, jnp.uint16)
+                bits = jax.lax.ppermute(bits, "model", perm)
+                buf = jax.lax.bitcast_convert_type(bits, jnp.bfloat16)
+            else:
+                buf = jax.lax.ppermute(buf, "model", perm)
+    return acc
+
+
 def probe_walks_ring(
     rg: RingGraph,
     walks: Array,  # [C, L] replicated
@@ -142,30 +206,8 @@ def probe_walks_ring(
             if eps_p > 0.0:
                 thresh = eps_p / (sqrt_c ** (p - 1))
                 scores = jnp.where(scores > thresh, scores, 0.0)
-            buf = scores
-            acc = jnp.zeros((rows, C_loc), jnp.float32)
-            for step in range(S):
-                blk = (me - step) % S
-                src_b = jnp.take(src_l[0], blk, axis=0)  # [E]
-                dst_b = jnp.take(dst_l[0], blk, axis=0)
-                bufp = jnp.concatenate(
-                    [buf, jnp.zeros((1, C_loc), buf.dtype)], axis=0
-                )
-                msgs = bufp[src_b.clip(0, rows)].astype(jnp.float32)
-                acc = acc + jax.ops.segment_sum(
-                    msgs, dst_b, num_segments=rows + 1
-                )[:rows]
-                if step < S - 1:
-                    # permute raw bits: XLA's algebraic simplifier otherwise
-                    # elides the f32->bf16->f32 round-trip and widens the
-                    # permute back to f32 (2x wire bytes)
-                    perm = [(i, (i + 1) % S) for i in range(S)]
-                    if buf.dtype == jnp.bfloat16:
-                        bits = jax.lax.bitcast_convert_type(buf, jnp.uint16)
-                        bits = jax.lax.ppermute(bits, "model", perm)
-                        buf = jax.lax.bitcast_convert_type(bits, jnp.bfloat16)
-                    else:
-                        buf = jax.lax.ppermute(buf, "model", perm)
+            acc = _ring_push_level(scores, src_l, dst_l, me,
+                                   shards=S, rows=rows)
             scores = (acc * w_l[:, None]).astype(frontier_dtype)
             scores = jnp.where(rid() == walks_l[:, p - 2][None, :], 0.0, scores)
         return scores
@@ -182,6 +224,82 @@ def probe_walks_ring(
         axis_names=manual,
     )
     return fn(walks, rg.src_sh, rg.dst_sh, w_full)
+
+
+def probe_lanes_ring(
+    src_sh: Array,  # int32 [S, S, E] block-relative src ids (sentinel rows)
+    dst_sh: Array,  # int32 [S, S, E] block-relative dst ids (sentinel rows)
+    w_full: Array,  # f32 [n_pad] sqrt(c)/in_deg renorm weights
+    pool: Array,  # int32 [Q*n_r, L] replicated walk pool (sentinel n)
+    pool_len: Array,  # int32 [Q*n_r] replicated
+    mesh,
+    *,
+    rows: int,
+    shards: int,
+    q: int,
+    wq: int,
+    n_r: int,
+    max_len: int,
+    sqrt_c: float,
+    eps_p: float,
+    sentinel: int,
+) -> Array:
+    """Lane-batched telescoped probe with the ring push; returns [n_pad, W].
+
+    The ring counterpart of ``core.distributed.probe_lanes_sharded``: the
+    same compacted lane loop over this shard's frontier block, but each push
+    level runs the double-buffered ring exchange (``_ring_push_level``) so
+    the collective permute overlaps the per-bucket gather/scatter compute.
+    Lane columns replicate over the data axes — the batched program has no
+    per-chunk column sharding, so ring serving composes with ANY (Q, n_r)
+    instead of falling back on divisibility remainders.
+    """
+    from repro.core.distributed import lane_probe_block
+    from repro.utils.jaxcompat import shard_map
+
+    edge_chunk = 2048
+    E = src_sh.shape[2]
+    # floor, not width: cap the per-bucket trip count at ~8 so chunking
+    # only pays for itself where it skips dead tail slots (same rule as
+    # probe_lanes_sharded — tiny chunks re-touch the accumulator)
+    ch = min(max(edge_chunk, -(-E // 8)), E)
+    e_pad = -(-E // ch) * ch
+    if e_pad != E:
+        fill = jnp.full(src_sh.shape[:2] + (e_pad - E,), rows, jnp.int32)
+        src_sh = jnp.concatenate([src_sh, fill], axis=2)
+        dst_sh = jnp.concatenate([dst_sh, fill], axis=2)
+
+    def local(src_l, dst_l, w_l, pool_l, plen_l):
+        # src_l/dst_l [1, S, E]; w_l [rows]; pool_l/plen_l replicated
+        me = jax.lax.axis_index("model")
+        row0 = me * rows
+        # live edges per resident bucket: sentinel slots (src == rows) are
+        # a suffix of every bucket by construction (partition_edges_2d
+        # packs each bucket's live prefix first)
+        counts_l = (src_l[0] != rows).sum(axis=1).astype(jnp.int32)  # [S]
+
+        def push_block(scores):
+            acc = _ring_push_level(scores, src_l, dst_l, me,
+                                   shards=shards, rows=rows,
+                                   counts_l=counts_l, edge_chunk=ch)
+            return acc * w_l[:, None]
+
+        return lane_probe_block(
+            push_block, pool_l, plen_l,
+            row0=row0, rows=rows, q=q, wq=wq, n_r=n_r,
+            max_len=max_len, sqrt_c=sqrt_c, eps_p=eps_p, sentinel=sentinel,
+        )
+
+    fn = shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(P("model", None, None), P("model", None, None),
+                  P("model"), P(), P()),
+        out_specs=P("model", None),
+        # fully manual, like the epoch apply step and the spmd lane probe
+        axis_names=set(mesh.axis_names),
+    )
+    return fn(src_sh, dst_sh, w_full, pool, pool_len)
 
 
 def make_ring_serve_step(cfg, *, queries: int, walk_chunk: int, max_len: int,

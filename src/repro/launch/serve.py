@@ -75,9 +75,11 @@ def main() -> None:
         backend=args.backend, shards=shards,
         batch_q=1, update_batch=args.updates_per_batch,
     )
+    # the batch dispatch label names the compiled step a Q-query burst
+    # lands on (e.g. "sharded[ring,Q=16]"): backend + probe + lane count
     print(f"graph: n={n} m={len(src)}; n_r={sess.params.n_r} walks/query "
           f"(eps_a={args.eps_a}), max_len={sess.params.max_len}; "
-          f"backend={sess.backend.name}"
+          f"dispatch={sess.backend.batch_dispatch_label(sess.batch_q)}"
           + (f" shards={shards}" if args.backend == "sharded" else "")
           + (" [fused epochs]" if args.epochs else ""))
 

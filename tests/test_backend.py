@@ -454,6 +454,71 @@ def test_sharded_epoch_then_host_update_stays_coherent(handle):
 
 
 # ---------------------------------------------------------------------------
+# Lane-batched sharded serving (single shard: runs on the plain CPU env)
+# ---------------------------------------------------------------------------
+
+
+def test_sharded_batched_scores_match_per_query(handle):
+    """The lane-batched sharded step is a pure batching of the per-query
+    step: Q queries in ONE dispatch score within 1e-6 of Q single-query
+    dispatches under the same per-query lane width and keys (matched
+    ``wq`` => identical lane schedule and walk streams)."""
+    p = make_params(handle.n, c=0.6, eps_a=0.2, delta=0.01)
+    nodes = [1, 2, 3, 4]
+    wq = 32  # lanes per query, held fixed across both dispatch shapes
+    batched = ShardedBackend(handle.shard(shards=1), params=p,
+                             walk_chunk=wq * len(nodes))
+    single = ShardedBackend(handle.shard(shards=1), params=p, walk_chunk=wq)
+    keys = jnp.stack([jax.random.key(40 + u) for u in nodes])
+    est_b, _, _ = batched.serve_batch("single_source", nodes, keys, n_r=96)
+    for i, u in enumerate(nodes):
+        est_1, _, _ = single.serve_batch(
+            "single_source", [u], keys[i:i + 1], n_r=96
+        )
+        assert np.abs(est_b[i] - est_1[0]).max() < 1e-6, u
+
+
+def test_sharded_serve_scores_match_local_fused(handle):
+    """Sharded drain vs local fused drain under shared per-query keys:
+    the same pooled sampler and lane schedule drive both, so scores agree
+    to the float-summation order of the two probes."""
+    key = jax.random.key(7)
+
+    def run(backend_kw):
+        sess = SimRankSession(handle, seed=0, top_k=5, batch_q=2,
+                              walk_chunk=128, **backend_kw)
+        for u in (1, 3):
+            sess.submit(QuerySpec(kind="single_source", node=u,
+                                  key=jax.random.fold_in(key, u)))
+        return np.stack([r.scores for r in sess.drain(budget_walks=192)])
+
+    local = run({})
+    sharded = run(dict(backend="sharded", shards=1))
+    assert np.abs(local - sharded).max() < 1e-4
+
+
+def test_sharded_serving_mirror_carried_and_invalidated(handle):
+    """Repeated serving reuses the carried device mirror (the epoch-path
+    ShardEpochGraph, keyed on the host mutation counter); a host-path
+    update invalidates it, and the rebuilt mirror is bit-identical to a
+    from-scratch rebuild of the updated edge list."""
+    sess = SimRankSession(handle, seed=0, top_k=5, backend="sharded",
+                          shards=1, walk_chunk=128)
+    sess.query(QuerySpec(kind="single_source", node=1, budget_walks=64))
+    st1 = sess.backend._epoch_graph
+    assert st1 is not None
+    sess.query(QuerySpec(kind="single_source", node=2, budget_walks=64))
+    assert sess.backend._epoch_graph is st1  # carried, not rebuilt
+    rep = sess.update(inserts=(np.array([0, 1]), np.array([2, 3])))
+    assert rep.applied == 2
+    env = sess.query(QuerySpec(kind="single_source", node=1,
+                               budget_walks=64))
+    assert env.version == 1
+    assert sess.backend._epoch_graph is not st1  # update invalidated it
+    _epoch_mirror_equals_rebuild(sess.backend)
+
+
+# ---------------------------------------------------------------------------
 # Mesh parity on 8 fake XLA host devices (subprocess: XLA_FLAGS first)
 # ---------------------------------------------------------------------------
 
@@ -506,6 +571,18 @@ er = ring.query(QuerySpec(kind="single_source", node=nodes[0],
                           budget_walks=1024, key=key))
 assert er.variant == "sharded[ring]"
 assert np.abs(es.scores - er.scores).max() < 1e-4
+
+# ring vs spmd LANE-BATCHED parity: one 3-query dispatch on each probe
+# (same pooled sampler stream, duplicate node with its own key included);
+# both label the compiled step with the probe and lane count
+assert shard.backend.batch_dispatch_label(3) == "sharded[spmd,Q=3]"
+assert ring.backend.batch_dispatch_label(3) == "sharded[ring,Q=3]"
+ub = [nodes[0], nodes[1], nodes[0]]
+kb = jnp.stack([jax.random.key(200 + i) for i in range(3)])
+ba, _, _ = shard.backend.serve_batch("single_source", ub, kb, n_r=512)
+bb, _, _ = ring.backend.serve_batch("single_source", ub, kb, n_r=512)
+assert np.abs(ba - bb).max() < 1e-4, np.abs(ba - bb).max()
+print("RING_SPMD_BATCH_OK")
 
 # sharded update -> query == rebuild-and-query (exact)
 rng = np.random.default_rng(3)
@@ -626,6 +703,7 @@ def test_sharded_backend_parity_on_fake_mesh():
         timeout=600,
     )
     assert out.returncode == 0, out.stderr[-2000:]
+    assert "RING_SPMD_BATCH_OK" in out.stdout
     assert "RING_REMAINDER_OK" in out.stdout
     assert "EPOCH_MESH_OK" in out.stdout
     assert "BACKEND_PARITY_OK" in out.stdout
