@@ -32,8 +32,8 @@ def write_json(path: str, *, quick: bool, suites: list[str]) -> None:
         results=dict(RESULTS),
         rows=rows,
     )
-    for key in ("serve", "dynamic"):  # promoted: acceptance artifacts
-        if key in RESULTS:
+    for key in ("serve", "dynamic", "abserror"):  # promoted: acceptance
+        if key in RESULTS:  # artifacts CI gates read at the top level
             payload[key] = RESULTS[key]
     with open(path, "w") as f:
         json.dump(payload, f, indent=2)

@@ -2,11 +2,14 @@
 
 Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit) and
 writes machine-readable artifacts: ``BENCH_serve.json`` (serving queries/sec
-for the serial vs fused-batched drain) when the serve suite runs and
+for the serial vs fused-batched drain) when the serve suite runs,
 ``BENCH_dynamic.json`` (incremental vs rebuild update throughput and
-update->queryable latency) when the dynamic suite runs, each also carrying
-every emitted row.  ``--full`` runs paper-scale sweeps; default (``--quick``)
-is the CPU-quick profile.
+update->queryable latency) when the dynamic suite runs, and
+``BENCH_abserror.json`` (the adaptive-controller epsilon sweep: walks used,
+oracle max-abs-error vs certified bound, precision@10, walks saved vs the
+flat budget) when the abserror suite runs — each also carrying every
+emitted row.  ``--full`` runs paper-scale sweeps; default (``--quick``) is
+the CPU-quick profile.
 """
 from __future__ import annotations
 
@@ -55,7 +58,10 @@ def main() -> None:
         kernels=bench_kernels.run,
     )
     takes_backend = {"serve", "dynamic"}  # suites with a mesh-backend leg
-    structured = {"serve", "dynamic"}  # suites that must fill RESULTS[name]
+    # suites that must fill RESULTS[name]; abserror is structured too — it
+    # used to print CSV rows and silently drop its metrics, so the
+    # accuracy-gate job had nothing machine-readable to enforce
+    structured = {"serve", "dynamic", "abserror"}
     chosen = args.only.split(",") if args.only else list(suites)
     unknown = [name for name in chosen if name not in suites]
     if unknown:
@@ -78,7 +84,7 @@ def main() -> None:
         if name in structured and name not in RESULTS:
             sys.exit(f"suite '{name}' was requested but exported no "
                      f"RESULTS['{name}'] row for its JSON artifact")
-        if (name in structured and args.backend == "sharded"
+        if (name in takes_backend and args.backend == "sharded"
                 and "backend" not in RESULTS[name]
                 and "sharded" not in RESULTS[name]):
             sys.exit(f"suite '{name}' ran with --backend sharded but "
@@ -93,6 +99,8 @@ def main() -> None:
             write_json("BENCH_serve.json", quick=quick, suites=chosen)
         if "dynamic" in chosen:
             write_json("BENCH_dynamic.json", quick=quick, suites=chosen)
+        if "abserror" in chosen:
+            write_json("BENCH_abserror.json", quick=quick, suites=chosen)
 
 
 if __name__ == "__main__":

@@ -70,6 +70,21 @@ from repro.utils.jaxcompat import make_mesh, set_mesh
 Array = jax.Array
 
 
+def _hub_nodes_from_degrees(deg: np.ndarray, percentile: float) -> frozenset:
+    """Nodes at or above the ``percentile``-th in-degree among positive
+    degrees — the hub set the accuracy controller's probe cache targets
+    (PRSim's power-law analysis: a few heavy hitters absorb most query
+    traffic on skewed graphs, so their probe rows are worth sharing)."""
+    if not 0.0 <= percentile <= 100.0:
+        raise ValueError(f"percentile must be in [0, 100], got {percentile}")
+    deg = np.asarray(deg)
+    pos = deg[deg > 0]
+    if pos.size == 0:
+        return frozenset()
+    thr = max(float(np.percentile(pos, percentile)), 1.0)
+    return frozenset(int(u) for u in np.flatnonzero(deg >= thr))
+
+
 # ---------------------------------------------------------------------------
 # The protocol
 # ---------------------------------------------------------------------------
@@ -113,6 +128,8 @@ class Backend(Protocol):
     def overflow(self) -> bool: ...
 
     def host_in_degrees(self) -> np.ndarray: ...
+
+    def hub_nodes(self, percentile: float) -> frozenset: ...
 
     def dispatch_label(self, variant: str) -> str: ...
 
@@ -187,6 +204,7 @@ class LocalBackend:
         self.params = params
         self.walk_chunk = walk_chunk
         self.use_kernel = use_kernel
+        self._hubs: tuple | None = None  # ((version, percentile), frozenset)
 
     # -- snapshot state ------------------------------------------------------
 
@@ -204,6 +222,15 @@ class LocalBackend:
 
     def host_in_degrees(self) -> np.ndarray:
         return np.asarray(self.handle.eg.in_deg)
+
+    def hub_nodes(self, percentile: float) -> frozenset:
+        """High in-degree hub set, cached per (graph version, percentile)."""
+        ck = (self.version, float(percentile))
+        if self._hubs is None or self._hubs[0] != ck:
+            self._hubs = (
+                ck, _hub_nodes_from_degrees(self.host_in_degrees(), percentile)
+            )
+        return self._hubs[1]
 
     def dispatch_label(self, variant: str) -> str:
         """Envelope ``variant`` field: the legacy variant, verbatim."""
@@ -753,6 +780,7 @@ class ShardedBackend:
         self._epoch_graph = None
         self._epoch_sync = -1
         self._epoch_steps: dict = {}  # config -> compiled epoch step
+        self._hubs: tuple | None = None  # ((version, percentile), frozenset)
 
     # -- snapshot state ------------------------------------------------------
 
@@ -770,6 +798,15 @@ class ShardedBackend:
 
     def host_in_degrees(self) -> np.ndarray:
         return self.state.host_in_degrees()
+
+    def hub_nodes(self, percentile: float) -> frozenset:
+        """High in-degree hub set, cached per (graph version, percentile)."""
+        ck = (self.version, float(percentile))
+        if self._hubs is None or self._hubs[0] != ck:
+            self._hubs = (
+                ck, _hub_nodes_from_degrees(self.host_in_degrees(), percentile)
+            )
+        return self._hubs[1]
 
     def dispatch_label(self, variant: str) -> str:
         """Envelope ``variant`` field: records the mesh path that served."""

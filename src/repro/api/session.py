@@ -70,6 +70,11 @@ import jax.numpy as jnp
 from repro.api.backend import Backend, LocalBackend, ShardedBackend
 from repro.api.handle import GraphHandle
 from repro.api.spec import QuerySpec, ResultEnvelope, as_spec
+from repro.core.accuracy import (
+    AccuracyController,
+    ProbeCache,
+    escalation_schedule,
+)
 from repro.core.epoch import epoch_step  # noqa: F401  (re-exported: the
 #   fused local epoch step now lives in core/epoch.py; legacy importers —
 #   serving.dynamic_engine among them — keep finding it here)
@@ -86,7 +91,11 @@ class EngineStats:
     ``queries``/``updates`` count logical work (queries answered, edge ops
     applied); ``steps`` counts fused serve dispatches, ``epochs`` fused
     update->query epochs, ``regrows`` capacity recoveries, ``retries``
-    straggler re-dispatches (incremented by serving.straggler callers).
+    straggler re-dispatches (incremented by serving.straggler callers);
+    ``escalations`` counts accuracy-controller rounds beyond the first
+    (extra dispatches adaptive queries paid), ``hub_hits`` whole serve
+    dispatches skipped because every row of an escalation round was
+    already in the hub probe cache.
     """
 
     queries: int = 0
@@ -95,6 +104,8 @@ class EngineStats:
     retries: int = 0
     epochs: int = 0
     regrows: int = 0
+    escalations: int = 0
+    hub_hits: int = 0
 
     def as_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -205,6 +216,13 @@ class SimRankSession:
     ``update_batch`` the fixed op width of epoch update batches.
     ``top_k`` is the default k for specs that don't pin one.
 
+    Adaptive accuracy (``core/accuracy.py``): specs with ``epsilon`` set
+    escalate geometrically from ``initial_budget`` walks until a
+    certificate meets the request; ``confidence`` is the default coverage
+    of the empirical CLT certificate; ``hub_percentile`` selects the
+    high in-degree hub set whose probe rows are cached and shared across
+    queries and drain batches (``probe_cache_entries`` bounds the cache).
+
     With ``auto_regrow`` (default), capacity overflow triggers host-side
     compaction into 2x buffers and the skipped inserts are retried — no
     update is ever lost; with ``auto_regrow=False`` skips are surfaced in
@@ -240,6 +258,10 @@ class SimRankSession:
         shards: int | None = None,
         mesh=None,
         backend_options: dict | None = None,
+        initial_budget: int = 64,
+        confidence: float = 0.99,
+        hub_percentile: float = 90.0,
+        probe_cache_entries: int = 256,
     ):
         if isinstance(handle, (LocalBackend, ShardedBackend)) or (
             not isinstance(handle, GraphHandle) and isinstance(handle, Backend)
@@ -332,11 +354,27 @@ class SimRankSession:
             self.params = getattr(backend, "params", None) or make_params(
                 backend.n, c=c, eps_a=eps_a, delta=delta
             )
+        if initial_budget < 1:
+            raise ValueError("initial_budget must be >= 1")
+        if not 0.0 < confidence < 1.0:
+            raise ValueError("confidence must be in (0, 1)")
+        self.initial_budget = int(initial_budget)
+        self.confidence = float(confidence)
+        self.hub_percentile = float(hub_percentile)
         self.key = jax.random.key(seed)
         self.query_queue: deque[tuple[QuerySpec, Array, QueryTicket]] = deque()
         self.update_queue: deque[tuple[int, int, bool]] = deque()
         self.stats = EngineStats()
         self._seq = 0  # submission counter -> per-query PRNG stream
+        # hub probe sharing (core/accuracy.py): adaptive queries on hub
+        # nodes ride NODE-keyed PRNG streams (a salted fold_in of the
+        # session key, not the submit-order stream), which makes their
+        # per-round score rows identical across queries and drain batches
+        # — the cache then skips whole dispatches when every row of a
+        # round is resident.  Session-seed-deterministic like everything
+        # else; caller-pinned spec.key bypasses both rekey and cache.
+        self._probe_cache = ProbeCache(probe_cache_entries)
+        self._hub_root = jax.random.fold_in(self.key, 0x5B5B)
 
     # -- snapshot state ------------------------------------------------------
 
@@ -419,7 +457,11 @@ class SimRankSession:
     # -- one-shot queries ----------------------------------------------------
 
     def query(
-        self, spec: QuerySpec | int, *, budget_walks: int | None = None
+        self,
+        spec: QuerySpec | int,
+        *,
+        budget_walks: int | None = None,
+        deadline_s: float | None = None,
     ) -> ResultEnvelope:
         """Serve one spec now, bypassing the queue.
 
@@ -429,10 +471,26 @@ class SimRankSession:
         (key-split semantics), batched specs ``multi_source(_topk)`` (a
         ``[Q]`` key array is passed through as per-query streams).  With
         ``spec.key=None`` the session assigns its own submit-order streams.
+
+        A spec with ``epsilon`` set runs the adaptive accuracy controller
+        instead (``core/accuracy.py``): escalate geometrically from the
+        session's ``initial_budget`` until a certificate meets epsilon,
+        capped at ``budget_walks`` (or the flat Thm-1 budget).
+        ``deadline_s`` clamps escalation (adaptive specs only): a miss
+        degrades to the best-so-far answer with ``certificate='deadline'``
+        — it never raises.
         """
         spec = as_spec(spec, default_k=self.top_k)
         if budget_walks is not None and spec.budget_walks is None:
             spec = dataclasses.replace(spec, budget_walks=budget_walks)
+        if spec.epsilon is not None:
+            return self._query_adaptive(spec, deadline_s=deadline_s)
+        if deadline_s is not None:
+            raise ValueError(
+                "deadline_s clamps the adaptive escalation loop — it "
+                "requires a spec with epsilon set (for flat-budget specs "
+                "use serving.straggler.dispatch around query())"
+            )
         variant = self.plan(spec)
         n_r = spec.budget_walks or self.params.n_r
         t0 = time.time()
@@ -484,6 +542,197 @@ class SimRankSession:
             return None, k
         return k, None  # scalar key: legacy split semantics
 
+    # -- adaptive accuracy serving (core/accuracy.py) ------------------------
+
+    def _query_adaptive(
+        self, spec: QuerySpec, *, deadline_s: float | None = None
+    ) -> ResultEnvelope:
+        """One-shot adaptive spec: run the escalation loop now.
+
+        Single-node specs return their per-query envelope directly; a
+        batched ``nodes`` spec fans out to per-node items (a scalar
+        ``spec.key`` is split into per-query streams — there is no legacy
+        adaptive path to reproduce) and collapses to ONE envelope whose
+        certificate is the batch's weakest member (``walks_used``/
+        ``certified_bound``/``rounds`` are the per-query maxima).
+        """
+        if spec.nodes is None:
+            key = spec.key if spec.key is not None else self._query_key()
+            envs = self._serve_adaptive([(spec, key)], deadline_s=deadline_s)
+            self.stats.queries += 1
+            return envs[0]
+        key, keys = self._multi_keys(spec)
+        if keys is None:
+            keys = jax.random.split(key, spec.q)
+        subs = [
+            dataclasses.replace(spec, node=int(u), nodes=None)
+            for u in spec.nodes
+        ]
+        envs = self._serve_adaptive(
+            list(zip(subs, list(keys))), deadline_s=deadline_s
+        )
+        self.stats.queries += spec.q
+        worst = max(envs, key=lambda e: e.certified_bound)
+        walks = max(e.walks_used for e in envs)
+        is_ss = spec.kind == "single_source"
+        return ResultEnvelope(
+            kind=spec.kind,
+            nodes=spec.nodes,
+            scores=np.stack([e.scores for e in envs]) if is_ss else None,
+            topk_nodes=(
+                None if is_ss else np.stack([e.topk_nodes for e in envs])
+            ),
+            topk_scores=(
+                None if is_ss else np.stack([e.topk_scores for e in envs])
+            ),
+            walks_used=walks,
+            latency_s=envs[0].latency_s,
+            version=self.version,
+            error_bound=self.error_bound(walks),
+            variant=envs[0].variant,
+            epsilon=spec.epsilon,
+            certified_bound=worst.certified_bound,
+            certificate=worst.certificate,
+            rounds=max(e.rounds for e in envs),
+        )
+
+    def _serve_adaptive(
+        self,
+        batch: list[tuple],
+        budget_walks: int | None = None,
+        *,
+        deadline_s: float | None = None,
+    ) -> list[ResultEnvelope]:
+        """Escalate one (possibly repeat-padded) batch until epsilon is met.
+
+        Items are ``(spec, key)`` or ``(spec, key, ticket)`` tuples sharing
+        one batch group.  Each round dispatches ONE fused single-source
+        step (the same compiled lane-batched program flat serving uses —
+        the loop lives outside it) under per-round ``fold_in(stream, r)``
+        keys and folds the ``[Q, n]`` rows into the controller's carried
+        accumulator; a query freezes at the round its certificate fires,
+        so its answer is independent of how long batch mates escalate.
+        The cap is ``spec.budget_walks`` (or the flat Thm-1 budget), which
+        bounds total spend at the flat budget structurally.
+
+        Hub queries (in-degree above ``hub_percentile``, ``spec.key`` not
+        pinned) ride node-keyed streams and their rows go through the
+        probe cache: a round whose rows are ALL resident skips its
+        dispatch entirely (``stats.hub_hits``) — bitwise identical to
+        serving, because cached rows were produced by the same streams.
+
+        ``deadline_s`` is checked before every round after the first; on a
+        miss the still-live queries freeze with ``certificate='deadline'``
+        and their best-so-far scores — degradation, never an exception.
+        """
+        spec0 = batch[0][0]
+        q = len(batch)
+        conf = (
+            spec0.confidence
+            if spec0.confidence is not None
+            else self.confidence
+        )
+        cap = spec0.budget_walks or budget_walks or self.params.n_r
+        ctrl = AccuracyController(
+            self.params,
+            n=self.backend.n,
+            q=q,
+            epsilon=spec0.epsilon,
+            confidence=conf,
+            plan=escalation_schedule(min(self.initial_budget, cap), cap),
+        )
+        us = [item[0].node for item in batch]
+        hubs = self.backend.hub_nodes(self.hub_percentile)
+        streams, cacheable = [], []
+        for item in batch:
+            sp = item[0]
+            if sp.key is None and sp.node in hubs:
+                streams.append(jax.random.fold_in(self._hub_root, sp.node))
+                cacheable.append(True)
+            else:
+                streams.append(item[1])
+                cacheable.append(False)
+        ver = self.version
+        t0 = time.time()
+        while True:
+            n_round = ctrl.next_round()
+            if n_round is None:
+                ctrl.finish("budget")
+                break
+            r = ctrl.rounds_done
+            if (
+                deadline_s is not None
+                and r > 0
+                and time.time() - t0 >= deadline_s
+            ):
+                ctrl.finish("deadline")
+                break
+            # the row is bitwise-determined by (node stream, version,
+            # round, round size) plus the lane geometry (q, walk_chunk)
+            ckeys = [
+                (us[i], ver, r, n_round, q, self.walk_chunk)
+                if cacheable[i]
+                else None
+                for i in range(q)
+            ]
+            rows = [
+                None if ck is None else self._probe_cache.get(ck)
+                for ck in ckeys
+            ]
+            if rows and all(row is not None for row in rows):
+                est = np.stack(rows)
+                self.stats.hub_hits += 1  # a whole dispatch skipped
+            else:
+                keys = jnp.stack(
+                    [jax.random.fold_in(s, r) for s in streams]
+                )
+                est, _, _ = self.backend.serve_batch(
+                    "single_source", us, keys, k=0, n_r=n_round
+                )
+                est = np.asarray(est)
+                self.stats.steps += 1
+                if r > 0:
+                    self.stats.escalations += 1
+                for i, ck in enumerate(ckeys):
+                    if ck is not None:
+                        self._probe_cache.put(ck, est[i])
+            ctrl.absorb(n_round, est)
+            if ctrl.all_frozen:
+                break
+        dt = time.time() - t0
+        label = self.backend.dispatch_label("telescoped")
+        out = []
+        for i, item in enumerate(batch):
+            sp = item[0]
+            scores, cert = ctrl.result(i)
+            env = ResultEnvelope(
+                kind=sp.kind,
+                node=sp.node,
+                walks_used=cert.walks,
+                latency_s=dt,
+                version=ver,
+                error_bound=self.error_bound(cert.walks),
+                variant=label,
+                epsilon=sp.epsilon,
+                certified_bound=cert.bound,
+                certificate=cert.name,
+                rounds=cert.rounds,
+            )
+            if sp.kind == "single_source":
+                env.scores = scores
+            else:
+                # host top-k over the combined vector, matching the fused
+                # epilogue's conventions: query node masked out, ties break
+                # toward the lower index (stable argsort == lax.top_k)
+                k = sp.k or self.top_k
+                masked = scores.copy()
+                masked[sp.node] = -np.inf
+                order = np.argsort(-masked, kind="stable")[:k]
+                env.topk_nodes = order.astype(np.int32)
+                env.topk_scores = masked[order]
+            out.append(env)
+        return out
+
     # -- queued serving (submit -> fused drain) ------------------------------
 
     def submit(self, spec: QuerySpec | int) -> QueryTicket:
@@ -511,8 +760,16 @@ class SimRankSession:
         return ticket
 
     def _batch_group(self, spec: QuerySpec):
-        """Specs that can share one fused dispatch (same shapes/budget)."""
-        return (spec.kind, spec.k, spec.budget_walks)
+        """Specs that can share one fused dispatch (same shapes/budget).
+
+        Adaptive specs additionally group on (epsilon, confidence): every
+        query in an escalation batch shares one controller, and flat specs
+        never mix with adaptive ones.
+        """
+        return (
+            spec.kind, spec.k, spec.budget_walks,
+            spec.epsilon, spec.confidence,
+        )
 
     def _pop_query_batch(self) -> tuple[list[tuple[QuerySpec, Array]], int]:
         """Pop up to ``batch_q`` group-compatible specs; repeat-pad the rest."""
@@ -539,9 +796,12 @@ class SimRankSession:
         Items are ``(spec, key)`` or ``(spec, key, ticket)`` tuples; the
         returned envelope list is positional (tickets — when present —
         are filled by the caller for the live slice only, so repeat
-        padding never double-assigns).
+        padding never double-assigns).  Adaptive groups (``epsilon`` set)
+        route to the escalation loop instead of one flat dispatch.
         """
         spec0 = batch[0][0]
+        if spec0.epsilon is not None:
+            return self._serve_adaptive(batch, budget_walks)
         n_r = spec0.budget_walks or budget_walks or self.params.n_r
         us = [item[0].node for item in batch]
         keys = jnp.stack([item[1] for item in batch])
@@ -773,6 +1033,15 @@ class SimRankSession:
         if queries is not None:
             for q in queries:
                 self.submit(q)
+        if self.query_queue and self.query_queue[0][0].epsilon is not None:
+            # the escalation loop lives OUTSIDE the compiled step (it must
+            # inspect per-round scores on host), so it cannot ride the
+            # fused update->query epoch; the specs stay queued
+            raise ValueError(
+                "adaptive (epsilon) specs cannot be served inside a fused "
+                "epoch — apply the update, then serve them via drain() or "
+                "query()"
+            )
         ops, batch = self._pop_updates()
         p = self.params
 

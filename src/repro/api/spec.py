@@ -34,6 +34,16 @@ class QuerySpec:
     ``topk``/``multi_source`` key-split semantics exactly, a ``[Q]`` key
     array is passed through as per-query streams; None lets the session
     assign its own submit-order stream.
+
+    ``epsilon`` requests *adaptive accuracy*: the session escalates the
+    walk budget geometrically until the Thm-1/2 analytic bound or the
+    empirical CLT certificate meets it (``core/accuracy.py``), with
+    ``budget_walks`` (or the flat Thm-1 budget) as the cap — the envelope
+    then reports the certified bound and which certificate fired.
+    ``epsilon=0.0`` is valid and never certifiable: the controller runs
+    the full schedule to the cap (how the parity tests pin escalated ==
+    one-shot).  ``confidence`` sets the empirical certificate's coverage
+    (None = the session default, 0.99).
     """
 
     kind: str = "topk"
@@ -43,6 +53,8 @@ class QuerySpec:
     budget_walks: int | None = None
     variant: str = "auto"
     key: Any = None
+    epsilon: float | None = None
+    confidence: float | None = None
 
     def __post_init__(self) -> None:
         if self.kind not in KINDS:
@@ -65,6 +77,12 @@ class QuerySpec:
             raise ValueError("k must be >= 1")
         if self.budget_walks is not None and self.budget_walks < 1:
             raise ValueError("budget_walks must be >= 1")
+        if self.epsilon is not None and self.epsilon < 0.0:
+            raise ValueError("epsilon must be >= 0")
+        if self.confidence is not None and not 0.0 < self.confidence < 1.0:
+            raise ValueError("confidence must be in (0, 1)")
+        if self.confidence is not None and self.epsilon is None:
+            raise ValueError("confidence requires epsilon (adaptive mode)")
 
     @property
     def q(self) -> int:
@@ -92,6 +110,15 @@ class ResultEnvelope:
     (see ``repro.core.params.abs_error_bound``); ``variant`` records what
     the session planner actually dispatched.
 
+    Adaptive queries (``spec.epsilon`` set) additionally report the
+    accuracy-controller outcome: ``epsilon`` echoes the request,
+    ``certified_bound`` is the tightest bound certified at the stopping
+    point (min of the analytic and empirical certificates — may be below
+    ``error_bound``, which stays the analytic bound at ``walks_used``),
+    ``certificate`` names what fired (``analytic`` / ``empirical``) or why
+    escalation stopped without meeting epsilon (``budget`` / ``deadline``),
+    and ``rounds`` counts the escalation rounds executed.
+
     Field-superset of the legacy ``QueryResult`` — engine shims return
     envelopes directly.
     """
@@ -107,3 +134,7 @@ class ResultEnvelope:
     version: int = -1
     error_bound: float = float("nan")
     variant: str = "telescoped"
+    epsilon: float | None = None
+    certified_bound: float = float("nan")
+    certificate: str | None = None
+    rounds: int = 1

@@ -13,10 +13,27 @@ Public API:
     mc_single_source    Monte Carlo baseline
     tsf_single_source   TSF baseline
     evaluate_with_pool  pooling evaluation (§6.2)
+    AccuracyController  adaptive per-query walk escalation (core/accuracy.py)
+    walks_for_error     Thm-1/2 inversion: walks needed for a requested eps
 """
+from repro.core.accuracy import (
+    AccuracyController,
+    Certificate,
+    ProbeCache,
+    empirical_error_bound,
+    escalation_schedule,
+    normal_quantile,
+)
 from repro.core.montecarlo import mc_pool_scores, mc_single_pair, mc_single_source
 from repro.core.multisource import multi_source, multi_source_topk
-from repro.core.params import ProbeSimParams, abs_error_bound, make_params
+from repro.core.params import (
+    ProbeSimParams,
+    abs_error_bound,
+    bound_from_sampling_error,
+    make_params,
+    sampling_error,
+    walks_for_error,
+)
 from repro.core.pooling import build_pool, evaluate_with_pool, pooled_ground_truth
 from repro.core.power import (
     simrank_power,
@@ -47,6 +64,15 @@ __all__ = [
     "ProbeSimParams",
     "make_params",
     "abs_error_bound",
+    "sampling_error",
+    "bound_from_sampling_error",
+    "walks_for_error",
+    "AccuracyController",
+    "Certificate",
+    "ProbeCache",
+    "empirical_error_bound",
+    "escalation_schedule",
+    "normal_quantile",
     "single_source",
     "single_source_simple",
     "multi_source",

@@ -35,6 +35,28 @@ class ProbeSimParams:
         return math.sqrt(self.c)
 
 
+def sampling_error(params: ProbeSimParams, *, n: int, n_r: int) -> float:
+    """Thm-1 sampling error a pool of ``n_r`` walks actually guarantees:
+    ``eps(n_r) = sqrt(3 c ln(n / delta) / n_r)`` (the inversion of
+    ``n_r = ceil(3c/eps^2 ln(n/delta))``)."""
+    if n_r < 1:
+        raise ValueError(f"n_r must be >= 1, got {n_r}")
+    return math.sqrt(3.0 * params.c * math.log(n / params.delta) / n_r)
+
+
+def bound_from_sampling_error(params: ProbeSimParams, eps: float) -> float:
+    """Thm-2 total bound for a given sampling error share ``eps``:
+    the pruning and truncation shares stack on top as
+    ``eps + (1 + eps) / (1 - sqrt(c)) * eps_p + eps_t / 2``.  Also how an
+    *empirical* sampling CI converts into a total certified bound — the
+    certificates differ only in the sampling term."""
+    return (
+        eps
+        + (1.0 + eps) / (1.0 - params.sqrt_c) * params.eps_p
+        + params.eps_t / 2.0
+    )
+
+
 def abs_error_bound(
     params: ProbeSimParams, *, n: int, n_r: int | None = None
 ) -> float:
@@ -51,14 +73,33 @@ def abs_error_bound(
     ``params.eps_a`` (up to the ceil slack in n_r).
     """
     r = int(params.n_r if n_r is None else n_r)
-    if r < 1:
-        raise ValueError(f"n_r must be >= 1, got {r}")
-    eps_eff = math.sqrt(3.0 * params.c * math.log(n / params.delta) / r)
-    return (
-        eps_eff
-        + (1.0 + eps_eff) / (1.0 - params.sqrt_c) * params.eps_p
-        + params.eps_t / 2.0
-    )
+    return bound_from_sampling_error(params, sampling_error(params, n=n, n_r=r))
+
+
+def walks_for_error(
+    params: ProbeSimParams, *, n: int, epsilon: float
+) -> int | None:
+    """Smallest walk count whose Thm-1/2 bound meets ``epsilon`` — or None.
+
+    Solving ``bound_from_sampling_error(params, e) <= epsilon`` for the
+    sampling error gives
+
+        e_max = (epsilon - eps_t/2 - kappa) / (1 + kappa),
+        kappa = eps_p / (1 - sqrt(c)),
+
+    which is the headroom left after the walk-count-independent pruning
+    and truncation floors.  ``None`` when the floors alone exceed epsilon:
+    no number of walks can certify it analytically (the adaptive
+    controller may still certify via the empirical CI's smaller sampling
+    term, but the floors are a hard limit for both certificates).
+    """
+    if epsilon <= 0.0:
+        return None
+    kappa = params.eps_p / (1.0 - params.sqrt_c)
+    e_max = (epsilon - params.eps_t / 2.0 - kappa) / (1.0 + kappa)
+    if e_max <= 0.0:
+        return None
+    return int(math.ceil(3.0 * params.c * math.log(n / params.delta) / e_max**2))
 
 
 def make_params(

@@ -16,9 +16,17 @@ epoch dispatch (``SimRankSession.epoch``, zero host transfers between
 update and query) — on the sharded backend the updates apply inside a
 shard_map step against device-resident shard buffers (core/epoch.py).
 
+``--epsilon`` serves every query through the adaptive accuracy controller
+(``core/accuracy.py``): escalate walks geometrically until a certificate
+meets the requested absolute error, capped at ``--walk-budget`` (or the
+flat Thm-1 budget).  Combined with ``--deadline-s`` the deadline rides
+in-band (``straggler.dispatch_adaptive``): a miss degrades to the
+best-so-far certificate instead of a shed retry.
+
 Usage:
   python -m repro.launch.serve --nodes 20000 --edges 200000 --queries 20 \
       --updates-per-batch 100 --eps-a 0.1
+  python -m repro.launch.serve --queries 20 --epsilon 0.1 --deadline-s 2.0
   XLA_FLAGS=--xla_force_host_platform_device_count=8 \
       python -m repro.launch.serve --backend sharded --shards 4 --epochs
 """
@@ -30,7 +38,7 @@ import time
 import numpy as np
 
 from repro.api import GraphHandle, QuerySpec, SimRankSession
-from repro.serving.straggler import HedgePolicy, dispatch
+from repro.serving.straggler import HedgePolicy, dispatch, dispatch_adaptive
 
 
 def main() -> None:
@@ -43,7 +51,11 @@ def main() -> None:
     ap.add_argument("--c", type=float, default=0.6)
     ap.add_argument("--top-k", type=int, default=50)
     ap.add_argument("--walk-budget", type=int, default=None,
-                    help="cap walks per query (anytime mode)")
+                    help="cap walks per query (anytime mode; with "
+                         "--epsilon: the escalation cap)")
+    ap.add_argument("--epsilon", type=float, default=None,
+                    help="adaptive accuracy: escalate walks per query "
+                         "until this absolute-error target is certified")
     ap.add_argument("--deadline-s", type=float, default=None)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--backend", choices=("local", "sharded"), default="local")
@@ -54,6 +66,9 @@ def main() -> None:
                     help="serve each update burst + query as ONE fused "
                          "epoch dispatch instead of update() + query()")
     args = ap.parse_args()
+    if args.epsilon is not None and args.epochs:
+        ap.error("--epsilon queries are served by the host-side escalation "
+                 "loop and cannot ride inside a fused --epochs dispatch")
 
     from repro.graph import powerlaw_graph
 
@@ -112,6 +127,30 @@ def main() -> None:
         upd = sess.update(inserts=(ins_src, ins_dst))
         upd_t = time.time() - t0
 
+        if args.epsilon is not None:
+            spec = QuerySpec(kind="topk", node=int(u), epsilon=args.epsilon,
+                             budget_walks=args.walk_budget)
+            if args.deadline_s:
+                # deadline rides in-band: a miss freezes best-so-far
+                # (certificate='deadline') instead of shedding + retrying
+                res = dispatch_adaptive(
+                    sess.query, spec,
+                    policy=HedgePolicy(deadline_s=args.deadline_s),
+                )
+            else:
+                res = sess.query(spec)
+            lat.append(res.latency_s)
+            top3 = ", ".join(
+                f"{nn}:{s:.4f}" for nn, s in
+                zip(res.topk_nodes[:3], res.topk_scores[:3])
+            )
+            print(f"q{i} u={u}: update({upd.applied} edges)={upd_t*1e3:.1f}ms "
+                  f"query={res.latency_s:.2f}s v{res.version} "
+                  f"walks={res.walks_used}/{sess.params.n_r} "
+                  f"cert={res.certificate}@{res.certified_bound:.4f} "
+                  f"rounds={res.rounds} top3=[{top3}]")
+            continue
+
         if args.deadline_s:
             def on_retry(attempt):
                 # report through the public stats API — EngineStats is
@@ -141,7 +180,10 @@ def main() -> None:
     print(f"latency: mean={lat.mean():.2f}s p50={np.percentile(lat,50):.2f}s "
           f"p99={np.percentile(lat,99):.2f}s; "
           f"updates applied: {sess.stats.updates}; "
-          f"dispatches: {sess.stats.steps}; retries: {sess.stats.retries}")
+          f"dispatches: {sess.stats.steps}; retries: {sess.stats.retries}"
+          + (f"; escalations: {sess.stats.escalations}; "
+             f"hub hits: {sess.stats.hub_hits}"
+             if args.epsilon is not None else ""))
 
 
 if __name__ == "__main__":

@@ -1,0 +1,704 @@
+"""Adaptive accuracy controller (core/accuracy.py) + session integration.
+
+The oracle-gated tests compare every adaptively-served query against the
+exact Power-Method SimRank (55 iterations — far past float32 resolution
+of c^t): the measured max-abs-error must sit inside the CERTIFIED bound
+the envelope reports, for every query, on every certificate.  The parity
+tests pin the PRNG contract: an escalated run that stops at cumulative N
+walks is bitwise identical to a one-shot run capped at N under the same
+pinned key (per-round fold_in streams + walk-weighted combine), locally
+and on the mesh-sharded backend (subprocess, 8 fake XLA devices).
+
+Property tests ride tests/hypothesis_compat.py — with hypothesis
+installed they fuzz; without it they skip, and the seeded fallback
+versions of the same properties always run.
+"""
+import math
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.api import GraphHandle, QuerySpec, SimRankSession
+from repro.core import (
+    make_params,
+    simrank_power,
+)
+from repro.core.accuracy import (
+    AccuracyController,
+    ProbeCache,
+    empirical_error_bound,
+    escalation_schedule,
+    normal_quantile,
+)
+from repro.core.params import (
+    abs_error_bound,
+    bound_from_sampling_error,
+    sampling_error,
+    walks_for_error,
+)
+from tests.hypothesis_compat import given, settings, st
+
+C = 0.6
+
+
+# ---------------------------------------------------------------------------
+# escalation_schedule: the parity backbone
+# ---------------------------------------------------------------------------
+
+
+def test_escalation_schedule_doubles_cumulative_to_cap():
+    sched = escalation_schedule(64, 7131)
+    assert sched == [64, 64, 128, 256, 512, 1024, 2048, 3035]
+    assert sum(sched) == 7131
+    cum = np.cumsum(sched)
+    # cumulative doubles until the clipped final round
+    assert cum[:-1].tolist() == [64, 128, 256, 512, 1024, 2048, 4096]
+
+
+def test_escalation_schedule_cap_at_or_below_initial_is_one_shot():
+    assert escalation_schedule(64, 64) == [64]
+    assert escalation_schedule(64, 10) == [10]
+    assert escalation_schedule(1, 1) == [1]
+
+
+def test_escalation_schedule_validates():
+    with pytest.raises(ValueError, match="initial"):
+        escalation_schedule(0, 100)
+    with pytest.raises(ValueError, match="cap"):
+        escalation_schedule(8, 0)
+
+
+def _assert_schedule_prefix_property(initial: int, cap: int) -> None:
+    """Stopping an escalation at cumulative N must execute exactly the
+    rounds a one-shot run with cap=N would — bitwise parity rests here."""
+    sched = escalation_schedule(initial, cap)
+    assert all(s >= 1 for s in sched)
+    assert sum(sched) == cap
+    cum = 0
+    for r, size in enumerate(sched):
+        cum += size
+        assert escalation_schedule(initial, cum) == sched[: r + 1]
+
+
+def test_escalation_schedule_prefix_property_seeded():
+    rng = np.random.default_rng(0)
+    for _ in range(50):
+        initial = int(rng.integers(1, 512))
+        cap = int(rng.integers(1, 100_000))
+        _assert_schedule_prefix_property(initial, cap)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(1, 512), st.integers(1, 100_000))
+def test_escalation_schedule_prefix_property(initial, cap):
+    _assert_schedule_prefix_property(initial, cap)
+
+
+# ---------------------------------------------------------------------------
+# normal_quantile / walks_for_error: dependency-free math
+# ---------------------------------------------------------------------------
+
+
+def test_normal_quantile_known_values():
+    assert abs(normal_quantile(0.975) - 1.959964) < 1e-5
+    assert abs(normal_quantile(0.995) - 2.575829) < 1e-5
+    assert abs(normal_quantile(0.5)) < 1e-9
+    # symmetry + round trip through the CDF
+    for p in (0.01, 0.3, 0.7, 0.9999, 1 - 1e-9):
+        z = normal_quantile(p)
+        assert abs(normal_quantile(1.0 - p) + z) < 1e-9
+        assert abs(0.5 * (1.0 + math.erf(z / math.sqrt(2.0))) - p) < 1e-10
+    for bad in (0.0, 1.0, -1.0, 2.0):
+        with pytest.raises(ValueError):
+            normal_quantile(bad)
+
+
+def test_walks_for_error_inverts_abs_error_bound():
+    p = make_params(1000, c=C, eps_a=0.1, delta=0.01)
+    for eps in (0.3, 0.2, 0.12, 0.1, 0.08):
+        n_w = walks_for_error(p, n=1000, epsilon=eps)
+        assert n_w is not None
+        assert abs_error_bound(p, n=1000, n_r=n_w) <= eps + 1e-9
+        if n_w > 1:  # minimality: one walk fewer misses the target
+            assert abs_error_bound(p, n=1000, n_r=n_w - 1) > eps
+    # the pruning + truncation floors are walk-count independent
+    floor = p.eps_p / (1.0 - p.sqrt_c) + p.eps_t / 2.0
+    assert walks_for_error(p, n=1000, epsilon=floor * 0.99) is None
+    assert walks_for_error(p, n=1000, epsilon=0.0) is None
+    assert walks_for_error(p, n=1000, epsilon=-0.1) is None
+
+
+def _assert_bound_monotone_to_floor(params, n: int) -> None:
+    floor = params.eps_p / (1.0 - params.sqrt_c) + params.eps_t / 2.0
+    bounds = [
+        abs_error_bound(params, n=n, n_r=2**i) for i in range(4, 24)
+    ]
+    assert all(b2 < b1 for b1, b2 in zip(bounds, bounds[1:]))
+    assert all(b > floor for b in bounds)  # never below the floors
+    assert bounds[-1] - floor < 0.01  # ...but tending to them
+
+
+def test_bound_monotone_nonincreasing_to_floor_seeded():
+    rng = np.random.default_rng(1)
+    for _ in range(20):
+        n = int(rng.integers(50, 5000))
+        c = float(rng.uniform(0.3, 0.8))
+        eps_a = float(rng.uniform(0.05, 0.3))
+        _assert_bound_monotone_to_floor(
+            make_params(n, c=c, eps_a=eps_a, delta=0.01), n
+        )
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(50, 5000), st.floats(0.3, 0.8), st.floats(0.05, 0.3))
+def test_bound_monotone_nonincreasing_to_floor(n, c, eps_a):
+    _assert_bound_monotone_to_floor(
+        make_params(n, c=c, eps_a=eps_a, delta=0.01), n
+    )
+
+
+# ---------------------------------------------------------------------------
+# empirical_error_bound: the CLT certificate
+# ---------------------------------------------------------------------------
+
+
+def _assert_empirical_inside_analytic(seed: int) -> None:
+    """With the variance clamped at the [0,1]-range worst case 1/4, the
+    empirical sampling term is z/2/sqrt(N) vs the analytic
+    sqrt(3c ln(n/delta))/sqrt(N) — strictly inside for realistic
+    confidences, so escalation can only stop EARLIER than flat serving."""
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(50, 5000))
+    c = float(rng.uniform(0.3, 0.8))
+    conf = float(rng.uniform(0.9, 0.995))
+    p = make_params(n, c=c, eps_a=float(rng.uniform(0.05, 0.3)), delta=0.01)
+    r = int(rng.integers(2, 7))
+    sizes = rng.integers(8, 512, size=r)
+    scores = rng.uniform(0.0, 1.0, size=(r, n))  # worst-case scatter
+    emp = empirical_error_bound(
+        p, n=n, round_sizes=sizes, round_scores=scores, confidence=conf
+    )
+    ana = abs_error_bound(p, n=n, n_r=int(sizes.sum()))
+    assert emp <= ana + 1e-12
+    # both stack the same floors on the sampling term
+    floor = bound_from_sampling_error(p, 0.0)
+    assert emp > floor
+
+
+def test_empirical_bound_inside_analytic_seeded():
+    for seed in range(20):
+        _assert_empirical_inside_analytic(seed)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 10**6))
+def test_empirical_bound_inside_analytic(seed):
+    _assert_empirical_inside_analytic(seed)
+
+
+def test_empirical_bound_zero_variance_hits_floor():
+    p = make_params(200, c=C, eps_a=0.1, delta=0.01)
+    const = np.full((3, 200), 0.01)
+    emp = empirical_error_bound(
+        p, n=200, round_sizes=[64, 64, 128], round_scores=const,
+        confidence=0.99,
+    )
+    assert abs(emp - bound_from_sampling_error(p, 0.0)) < 1e-12
+
+
+def test_empirical_bound_validates():
+    p = make_params(100, c=C, eps_a=0.1, delta=0.01)
+    ok = np.zeros((2, 100))
+    with pytest.raises(ValueError, match="2 rounds"):
+        empirical_error_bound(p, n=100, round_sizes=[64],
+                              round_scores=ok[:1], confidence=0.99)
+    with pytest.raises(ValueError, match="round size"):
+        empirical_error_bound(p, n=100, round_sizes=[64, 64, 64],
+                              round_scores=ok, confidence=0.99)
+    with pytest.raises(ValueError, match="confidence"):
+        empirical_error_bound(p, n=100, round_sizes=[64, 64],
+                              round_scores=ok, confidence=1.0)
+
+
+def test_sampling_error_validates():
+    p = make_params(100, c=C, eps_a=0.1, delta=0.01)
+    with pytest.raises(ValueError, match="n_r"):
+        sampling_error(p, n=100, n_r=0)
+
+
+# ---------------------------------------------------------------------------
+# AccuracyController: freeze semantics
+# ---------------------------------------------------------------------------
+
+
+def test_controller_freezes_queries_independently():
+    """A query's answer is fixed the round ITS certificate fires — batch
+    mates escalating further must not change it (batch invariance)."""
+    p = make_params(100, c=C, eps_a=0.1, delta=0.01)
+    ctrl = AccuracyController(
+        p, n=100, q=2, epsilon=0.06, confidence=0.99, plan=[64, 64, 128]
+    )
+    flat = np.full(100, 0.01, np.float32)  # zero between-round variance
+    noisy0 = np.zeros(100, np.float32)  # clamp-level variance
+    noisy1 = np.ones(100, np.float32)
+    ctrl.absorb(64, np.stack([flat, noisy0]))
+    assert ctrl.certificates == [None, None]  # 1 round: no empirical yet
+    ctrl.absorb(64, np.stack([flat, noisy1]))
+    cert0 = ctrl.certificates[0]
+    assert cert0 is not None and cert0.name == "empirical"
+    assert cert0.walks == 128 and cert0.rounds == 2
+    assert ctrl.certificates[1] is None
+    assert not ctrl.all_frozen
+    # a later round must not move the frozen answer
+    ctrl.absorb(128, np.stack([flat * 3, noisy0]))
+    scores0, again = ctrl.result(0)
+    assert again is cert0
+    np.testing.assert_array_equal(scores0, flat)
+    with pytest.raises(RuntimeError, match="not frozen"):
+        ctrl.result(1)
+    assert ctrl.next_round() is None  # plan exhausted
+    ctrl.finish("budget")
+    scores1, cert1 = ctrl.result(1)
+    assert cert1.name == "budget" and cert1.walks == 256 and cert1.rounds == 3
+    # walk-weighted mean over all three rounds of query 1
+    want = (64 * 0.0 + 64 * 1.0 + 128 * 0.0) / 256
+    np.testing.assert_allclose(scores1, np.full(100, want, np.float32),
+                               rtol=1e-6)
+
+
+def test_controller_validates():
+    p = make_params(100, c=C, eps_a=0.1, delta=0.01)
+    with pytest.raises(ValueError, match="epsilon"):
+        AccuracyController(p, n=100, q=1, epsilon=-0.1, confidence=0.99,
+                           plan=[64])
+    with pytest.raises(ValueError, match="plan"):
+        AccuracyController(p, n=100, q=1, epsilon=0.1, confidence=0.99,
+                           plan=[])
+    ctrl = AccuracyController(p, n=100, q=2, epsilon=0.1, confidence=0.99,
+                              plan=[64])
+    with pytest.raises(RuntimeError, match="finish"):
+        ctrl.finish()
+    with pytest.raises(ValueError, match="shape"):
+        ctrl.absorb(64, np.zeros((3, 100)))
+
+
+# ---------------------------------------------------------------------------
+# ProbeCache
+# ---------------------------------------------------------------------------
+
+
+def test_probe_cache_eviction_is_insertion_ordered():
+    cache = ProbeCache(max_entries=2)
+    k = lambda node: (node, 0, 0, 64, 1, 128)  # noqa: E731
+    cache.put(k(1), np.ones(4))
+    cache.put(k(2), np.ones(4) * 2)
+    cache.put(k(3), np.ones(4) * 3)  # evicts node 1
+    assert len(cache) == 2
+    assert cache.get(k(1)) is None
+    np.testing.assert_array_equal(cache.get(k(3)), np.ones(4) * 3)
+    assert cache.hits == 1 and cache.misses == 1
+    # re-putting a resident key is not an eviction
+    cache.put(k(3), np.ones(4) * 3)
+    assert cache.get(k(2)) is not None
+
+
+def test_probe_cache_version_bump_clears():
+    cache = ProbeCache(max_entries=8)
+    cache.put((7, 0, 0, 64, 1, 128), np.ones(4))
+    assert len(cache) == 1
+    assert cache.get((7, 1, 0, 64, 1, 128)) is None  # new graph version
+    assert len(cache) == 0  # every held row was stale
+    with pytest.raises(ValueError, match="max_entries"):
+        ProbeCache(max_entries=0)
+
+
+# ---------------------------------------------------------------------------
+# Oracle gate: adaptive serving vs exact Power-Method SimRank
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def oracle():
+    from repro.graph import powerlaw_graph
+
+    src, dst, n = powerlaw_graph(120, 900, seed=1)
+    in_deg = np.bincount(dst, minlength=n)
+    h = GraphHandle.from_edges(
+        src, dst, n, capacity=len(src) + 64, k_max=int(in_deg.max()) + 8
+    )
+    truth = np.asarray(simrank_power(h.g, c=C, iters=55))
+    rng = np.random.default_rng(0)
+    nodes = rng.choice(np.where(in_deg > 0)[0], size=6, replace=False)
+    return dict(h=h, truth=truth, nodes=nodes, in_deg=in_deg)
+
+
+def _adaptive_session(h, eps_a, **kw):
+    kw.setdefault("own_graph", False)
+    return SimRankSession(h, c=C, eps_a=eps_a, delta=0.01, walk_chunk=128,
+                          **kw)
+
+
+def test_oracle_error_within_certified_bound_every_query(oracle):
+    """THE acceptance gate: for every adaptively-served query the measured
+    max abs error vs the exact oracle is <= the certified bound the
+    envelope reports — and the controller spent fewer walks than flat."""
+    h, truth = oracle["h"], oracle["truth"]
+    for eps in (0.1, 0.05):
+        sess = _adaptive_session(h, eps, seed=11)
+        for u in oracle["nodes"]:
+            env = sess.query(
+                QuerySpec(kind="single_source", node=int(u), epsilon=eps)
+            )
+            e = np.abs(env.scores - truth[u])
+            e[u] = 0.0
+            assert float(e.max()) <= env.certified_bound, (
+                eps, int(u), float(e.max()), env.certified_bound,
+            )
+            assert env.certificate in ("analytic", "empirical", "budget")
+            if env.certificate != "budget":
+                assert env.certified_bound <= eps
+            assert env.walks_used <= sess.params.n_r
+            assert env.epsilon == eps
+            assert env.rounds >= 1
+
+
+def test_oracle_precision_at_10(oracle):
+    """Escalation certifies absolute error, which at eps=0.1 already pins
+    the top of the ranking: precision@10 vs the oracle must stay >= 0.9."""
+    h, truth = oracle["h"], oracle["truth"]
+    sess = _adaptive_session(h, 0.1, seed=3)
+    precs = []
+    for u in oracle["nodes"]:
+        env = sess.query(QuerySpec(kind="topk", node=int(u), k=10,
+                                   epsilon=0.1))
+        t = truth[u].copy()
+        t[u] = -np.inf
+        kk = min(10, int((t > 0).sum()))
+        truth_top = set(np.argsort(-t, kind="stable")[:kk].tolist())
+        est_top = set(env.topk_nodes[:kk].tolist())
+        precs.append(len(est_top & truth_top) / kk if kk else 1.0)
+    assert float(np.mean(precs)) >= 0.9, precs
+
+
+def test_adaptive_saves_walks_vs_flat(oracle):
+    """The headline: the empirical certificate fires far before the flat
+    Thm-1 budget on real score distributions (and never after it)."""
+    sess = _adaptive_session(oracle["h"], 0.1, seed=5)
+    env = sess.query(QuerySpec(
+        kind="single_source", node=int(oracle["nodes"][0]), epsilon=0.1,
+    ))
+    assert env.certificate == "empirical"
+    assert env.walks_used * 4 <= sess.params.n_r  # >= 4x saved
+    assert sess.stats.escalations >= 0
+
+
+# ---------------------------------------------------------------------------
+# Escalated == one-shot bitwise parity (the PRNG contract)
+# ---------------------------------------------------------------------------
+
+
+def test_escalated_equals_one_shot_bitwise_local(oracle):
+    """An escalated run stopping at cumulative N is bitwise identical to a
+    one-shot run whose cap is N under the same pinned key: epsilon=0.0
+    never certifies, so the reference run executes the full schedule to
+    its budget cap — the same rounds, the same fold_in keys."""
+    h = oracle["h"]
+    u = int(oracle["nodes"][1])
+    key = jax.random.key(7)
+    sess = _adaptive_session(h, 0.1, seed=0)
+    env = sess.query(QuerySpec(kind="single_source", node=u, epsilon=0.1,
+                               key=key))
+    assert env.certificate in ("analytic", "empirical")
+    ref = sess.query(QuerySpec(kind="single_source", node=u, epsilon=0.0,
+                               budget_walks=env.walks_used, key=key))
+    assert ref.certificate == "budget"
+    assert ref.walks_used == env.walks_used
+    assert ref.rounds == env.rounds
+    assert np.array_equal(env.scores, ref.scores)  # bitwise, not close
+
+
+def test_adaptive_topk_is_host_epilogue_over_scores(oracle):
+    """topk under escalation = stable argsort of the combined scores with
+    the query node masked (ties toward the lower index, like lax.top_k)."""
+    h = oracle["h"]
+    u = int(oracle["nodes"][2])
+    key = jax.random.key(9)
+    sess = _adaptive_session(h, 0.1, seed=0)
+    ss = sess.query(QuerySpec(kind="single_source", node=u, epsilon=0.1,
+                              key=key))
+    tk = sess.query(QuerySpec(kind="topk", node=u, k=10, epsilon=0.1,
+                              key=key))
+    assert tk.walks_used == ss.walks_used
+    masked = ss.scores.copy()
+    masked[u] = -np.inf
+    order = np.argsort(-masked, kind="stable")[:10]
+    np.testing.assert_array_equal(tk.topk_nodes, order.astype(np.int32))
+    np.testing.assert_array_equal(tk.topk_scores, masked[order])
+    assert u not in tk.topk_nodes.tolist()
+    assert tk.topk_nodes.dtype == np.int32
+
+
+def test_adaptive_drain_batch_per_query_certificates(oracle):
+    """Queued adaptive specs group into one escalating lane batch; every
+    envelope carries its OWN certificate, and the batch answer for a
+    pinned-key query is reproducible across drains."""
+    h = oracle["h"]
+    nodes = [int(u) for u in oracle["nodes"][:3]]
+    keys = [jax.random.key(100 + u) for u in nodes]
+
+    def drain_once():
+        sess = _adaptive_session(h, 0.1, seed=0, batch_q=4)
+        for u, k in zip(nodes, keys):
+            sess.submit(QuerySpec(kind="single_source", node=u,
+                                  epsilon=0.1, key=k))
+        return sess, sess.drain()
+
+    sess, envs = drain_once()
+    assert len(envs) == 3
+    for env, u in zip(envs, nodes):
+        assert env.node == u
+        assert env.certificate in ("analytic", "empirical", "budget")
+        assert env.walks_used <= sess.params.n_r
+        assert env.scores.shape == (h.n,)
+    _, envs2 = drain_once()
+    for a, b in zip(envs, envs2):
+        assert np.array_equal(a.scores, b.scores)
+        assert a.certificate == b.certificate and a.walks_used == b.walks_used
+
+
+def test_adaptive_batched_nodes_spec_aggregates_worst(oracle):
+    h = oracle["h"]
+    nodes = [int(u) for u in oracle["nodes"][:2]]
+    sess = _adaptive_session(h, 0.1, seed=2)
+    env = sess.query(QuerySpec(kind="single_source", nodes=nodes,
+                               epsilon=0.1))
+    assert env.scores.shape == (2, h.n)
+    assert env.certificate in ("analytic", "empirical", "budget")
+    assert env.certified_bound > 0.0
+    assert env.walks_used <= sess.params.n_r
+
+
+# ---------------------------------------------------------------------------
+# Hub probe cache
+# ---------------------------------------------------------------------------
+
+
+def test_hub_cache_skips_dispatches_bitwise(oracle):
+    """Repeat queries against a hub node (no pinned key) ride node-keyed
+    streams: their per-round rows come from the cache, whole dispatches
+    are skipped, and the answers stay bitwise identical."""
+    h, in_deg = oracle["h"], oracle["in_deg"]
+    hub = int(np.argmax(in_deg))
+    sess = _adaptive_session(h, 0.1, seed=0, hub_percentile=50.0)
+    assert hub in sess.backend.hub_nodes(50.0)
+    a = sess.query(QuerySpec(kind="single_source", node=hub, epsilon=0.1))
+    steps_after_first = sess.stats.steps
+    assert sess.stats.hub_hits == 0  # cold cache: every round dispatched
+    b = sess.query(QuerySpec(kind="single_source", node=hub, epsilon=0.1))
+    assert np.array_equal(a.scores, b.scores)
+    assert a.certificate == b.certificate and a.walks_used == b.walks_used
+    assert sess.stats.hub_hits == a.rounds  # every round skipped its step
+    assert sess.stats.steps == steps_after_first
+    # a pinned key bypasses the node-keyed stream AND the cache
+    c_ = sess.query(QuerySpec(kind="single_source", node=hub, epsilon=0.1,
+                              key=jax.random.key(1)))
+    assert sess.stats.hub_hits == a.rounds
+    assert not np.array_equal(a.scores, c_.scores)
+
+
+def test_hub_cache_invalidated_by_graph_version(oracle):
+    h, in_deg = oracle["h"], oracle["in_deg"]
+    hub = int(np.argmax(in_deg))
+    sess = _adaptive_session(h, 0.1, seed=0, hub_percentile=50.0,
+                             own_graph=True)
+    a = sess.query(QuerySpec(kind="single_source", node=hub, epsilon=0.1))
+    sess.update(inserts=(np.array([0, 1], np.int32),
+                         np.array([2, hub], np.int32)))
+    b = sess.query(QuerySpec(kind="single_source", node=hub, epsilon=0.1))
+    assert b.version == a.version + 1
+    assert sess.stats.hub_hits == 0  # version bump cleared every row
+    assert not np.array_equal(a.scores, b.scores)  # post-update snapshot
+
+
+def test_hub_nodes_percentile_selection(oracle):
+    h, in_deg = oracle["h"], oracle["in_deg"]
+    sess = _adaptive_session(h, 0.1, seed=0)
+    hubs = sess.backend.hub_nodes(90.0)
+    assert hubs  # a power-law graph always has hubs
+    thresh = min(in_deg[u] for u in hubs)
+    assert all(in_deg[u] >= thresh for u in hubs)
+    assert int(np.argmax(in_deg)) in hubs
+    assert sess.backend.hub_nodes(90.0) is hubs  # cached per version
+    with pytest.raises(ValueError, match="percentile"):
+        sess.backend.hub_nodes(101.0)
+
+
+# ---------------------------------------------------------------------------
+# Deadline + epoch interaction
+# ---------------------------------------------------------------------------
+
+
+def test_deadline_miss_degrades_to_best_so_far(oracle):
+    """A missed in-band deadline freezes the round-0 answer with
+    certificate='deadline' — never an exception on the query path."""
+    sess = _adaptive_session(oracle["h"], 0.1, seed=0)
+    env = sess.query(
+        QuerySpec(kind="single_source", node=int(oracle["nodes"][0]),
+                  epsilon=1e-6),  # unreachable: floors exceed it
+        deadline_s=0.0,
+    )
+    assert env.certificate == "deadline"
+    assert env.rounds == 1  # round 0 always runs
+    assert env.walks_used == sess.initial_budget
+    assert np.isfinite(env.certified_bound)
+    assert env.certified_bound > 1e-6  # honest: the miss is reported
+
+
+def test_deadline_requires_epsilon(oracle):
+    sess = _adaptive_session(oracle["h"], 0.1, seed=0)
+    with pytest.raises(ValueError, match="epsilon"):
+        sess.query(QuerySpec(kind="single_source", node=1), deadline_s=1.0)
+
+
+def test_epoch_refuses_adaptive_specs(oracle):
+    sess = _adaptive_session(oracle["h"], 0.1, seed=0, own_graph=True)
+    sess.submit(QuerySpec(kind="single_source", node=1, epsilon=0.1))
+    with pytest.raises(ValueError, match="epoch"):
+        sess.epoch(inserts=(np.array([0], np.int32),
+                            np.array([1], np.int32)))
+
+
+def test_spec_validates_epsilon_confidence():
+    with pytest.raises(ValueError, match="epsilon"):
+        QuerySpec(kind="single_source", node=1, epsilon=-0.1)
+    with pytest.raises(ValueError, match="confidence"):
+        QuerySpec(kind="single_source", node=1, epsilon=0.1, confidence=1.0)
+    with pytest.raises(ValueError, match="confidence"):
+        QuerySpec(kind="single_source", node=1, confidence=0.99)
+    # epsilon=0.0 is valid: never certifiable, runs the full schedule
+    # (how the parity tests pin a one-shot reference run)
+    QuerySpec(kind="single_source", node=1, epsilon=0.0)
+
+
+# ---------------------------------------------------------------------------
+# Sharded backend: adaptive parity on 8 fake devices (subprocess)
+# ---------------------------------------------------------------------------
+
+_SHARDED_ADAPTIVE_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np
+import jax
+from repro.api import GraphHandle, QuerySpec, SimRankSession
+from repro.graph import powerlaw_graph
+
+src, dst, n = powerlaw_graph(120, 900, seed=5)
+in_deg = np.bincount(dst, minlength=n)
+h = GraphHandle.from_edges(src, dst, n, capacity=len(src) + 256,
+                           k_max=int(in_deg.max()) + 8)
+sess = SimRankSession(h, c=0.6, eps_a=0.1, delta=0.01, seed=0, top_k=5,
+                      walk_chunk=256, backend="sharded", shards=4)
+assert len(jax.devices()) == 8
+u = int(np.argmax(in_deg))
+key = jax.random.key(31)
+env = sess.query(QuerySpec(kind="single_source", node=u, epsilon=0.1,
+                           key=key))
+assert env.certificate in ("analytic", "empirical"), env.certificate
+assert env.walks_used < sess.params.n_r, (env.walks_used, sess.params.n_r)
+assert env.variant.startswith("sharded"), env.variant
+ref = sess.query(QuerySpec(kind="single_source", node=u, epsilon=0.0,
+                           budget_walks=env.walks_used, key=key))
+assert ref.certificate == "budget"
+assert ref.rounds == env.rounds
+assert np.array_equal(env.scores, ref.scores), (
+    np.abs(env.scores - ref.scores).max())
+# hub cache on the mesh: repeat hub query skips whole sharded dispatches
+a = sess.query(QuerySpec(kind="single_source", node=u, epsilon=0.1))
+b = sess.query(QuerySpec(kind="single_source", node=u, epsilon=0.1))
+assert np.array_equal(a.scores, b.scores)
+assert sess.stats.hub_hits == a.rounds, (sess.stats.hub_hits, a.rounds)
+print("ADAPTIVE_SHARDED_PARITY_OK")
+"""
+
+
+def test_adaptive_sharded_parity_on_fake_mesh():
+    """Escalated == one-shot bitwise parity and the hub probe cache on
+    the mesh-sharded backend, 8 fake XLA host devices (subprocess: the
+    device-count flag must precede jax init)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    out = subprocess.run(
+        [sys.executable, "-c", _SHARDED_ADAPTIVE_SCRIPT],
+        capture_output=True, text=True, env=env,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        timeout=600,
+    )
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "ADAPTIVE_SHARDED_PARITY_OK" in out.stdout
+
+
+# ---------------------------------------------------------------------------
+# UpdateBatch apply == rebuild under generated insert/delete mixes
+# (promotes test_dynamic.py's hand-picked cases to a property)
+# ---------------------------------------------------------------------------
+
+
+def _assert_apply_equals_rebuild(seed: int) -> None:
+    from repro.graph import (
+        apply_update_batch_jit,
+        ell_from_edges,
+        erdos_renyi_graph,
+        graph_from_edges,
+        graph_to_host_edges,
+        make_update_batch,
+    )
+
+    rng = np.random.default_rng(seed)
+    src, dst, n = erdos_renyi_graph(60, 300, seed=5)
+    g = graph_from_edges(src, dst, n, capacity=len(src) + 64)
+    eg = ell_from_edges(
+        src, dst, n, k_max=int(np.bincount(dst, minlength=n).max()) + 8
+    )
+    for _ in range(3):
+        cs, cd = graph_to_host_edges(g)
+        n_ins = int(rng.integers(0, 9))
+        n_del = int(rng.integers(0, 9))
+        live = rng.permutation(len(cs))[:n_del]  # deletes of LIVE edges...
+        ds = np.concatenate([cs[live],  # ...plus possibly-absent ones
+                             rng.integers(0, n, 2).astype(np.int32)])
+        dd = np.concatenate([cd[live],
+                             rng.integers(0, n, 2).astype(np.int32)])
+        s = np.concatenate([rng.integers(0, n, n_ins).astype(np.int32), ds])
+        d = np.concatenate([rng.integers(0, n, n_ins).astype(np.int32), dd])
+        ins = np.concatenate([np.ones(n_ins, bool),
+                              np.zeros(len(ds), bool)])
+        batch = make_update_batch(s, d, ins, batch_size=32, n=n)
+        g, eg, _ = apply_update_batch_jit(g, eg, batch)
+        # incremental mirrors == from-scratch rebuild of the live edges
+        s2, d2 = graph_to_host_edges(g)
+        g_rb = graph_from_edges(s2, d2, n, capacity=g.capacity)
+        eg_rb = ell_from_edges(s2, d2, n, k_max=eg.k_max)
+        np.testing.assert_array_equal(np.asarray(g.src), np.asarray(g_rb.src))
+        np.testing.assert_array_equal(np.asarray(g.dst), np.asarray(g_rb.dst))
+        np.testing.assert_array_equal(np.asarray(g.in_deg),
+                                      np.asarray(g_rb.in_deg))
+        np.testing.assert_array_equal(np.asarray(eg.in_nbrs),
+                                      np.asarray(eg_rb.in_nbrs))
+        np.testing.assert_array_equal(np.asarray(eg.in_deg),
+                                      np.asarray(eg_rb.in_deg))
+
+
+def test_update_batch_apply_equals_rebuild_seeded():
+    for seed in range(4):
+        _assert_apply_equals_rebuild(seed)
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 10**6))
+def test_update_batch_apply_equals_rebuild(seed):
+    _assert_apply_equals_rebuild(seed)

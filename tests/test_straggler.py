@@ -14,6 +14,7 @@ from repro.serving.straggler import (
     DeadlineError,
     HedgePolicy,
     dispatch,
+    dispatch_adaptive,
     run_with_deadline,
 )
 
@@ -117,6 +118,69 @@ def test_dispatch_budget_floor_is_one():
     )
     assert out == 1
     assert budgets == [2, 1, 1]  # max(1, int(...)) floor per attempt
+
+
+def test_dispatch_adaptive_passes_deadline_in_band():
+    """The adaptive wrapper hands the POLICY deadline to the callable —
+    the escalation loop clamps itself; no retry/shed machinery runs."""
+    seen = {}
+
+    def fn(spec, **kwargs):
+        seen.update(kwargs, spec=spec)
+        return "ok"
+
+    out = dispatch_adaptive(
+        fn, "spec", policy=HedgePolicy(deadline_s=2.5)
+    )
+    assert out == "ok"
+    assert seen == {"spec": "spec", "deadline_s": 2.5}
+
+
+def test_dispatch_adaptive_backstop_bounds_wedged_fn():
+    """A callable that ignores its in-band deadline entirely is still
+    bounded by the thread backstop at backstop_factor x deadline_s —
+    the only way dispatch_adaptive ever raises."""
+    with pytest.raises(DeadlineError):
+        dispatch_adaptive(
+            lambda **kw: time.sleep(5.0),
+            policy=HedgePolicy(deadline_s=0.05),
+            backstop_factor=2.0,
+        )
+
+
+def test_dispatch_adaptive_validates_backstop_factor():
+    with pytest.raises(ValueError, match="backstop_factor"):
+        dispatch_adaptive(
+            lambda **kw: None,
+            policy=HedgePolicy(deadline_s=1.0),
+            backstop_factor=0.5,
+        )
+
+
+def test_dispatch_adaptive_deadline_miss_degrades_not_raises(toy):
+    """End-to-end through the session: a missed in-band deadline freezes
+    the best-so-far answer with certificate='deadline' instead of
+    raising — the availability contract the adaptive path promises."""
+    from repro.api import GraphHandle, QuerySpec, SimRankSession
+
+    sess = SimRankSession(
+        GraphHandle(g=toy["g"], eg=toy["eg"]), eps_a=0.3, top_k=3
+    )
+    # epsilon below the pruning/truncation floors is never certifiable,
+    # so only the deadline can stop escalation before the budget cap;
+    # pre-warm round 0's compile so the in-band 0.1ms window measures the
+    # dispatch, then give the backstop 100s of headroom — it must NOT fire
+    sess.query(QuerySpec(kind="single_source", node=0, epsilon=1e-6),
+               deadline_s=0.0)
+    env = dispatch_adaptive(
+        sess.query,
+        QuerySpec(kind="single_source", node=0, epsilon=1e-6),
+        policy=HedgePolicy(deadline_s=1e-4),
+        backstop_factor=1e6,
+    )
+    assert env.certificate == "deadline"
+    assert env.rounds == 1  # round 0 always runs
+    assert np.isfinite(env.certified_bound)
 
 
 def test_retries_reported_through_session_stats_api(toy):
