@@ -1,0 +1,174 @@
+"""Service load bench: closed-loop HTTP clients against the live server.
+
+Protocol (acceptance: >= 256 concurrent in-flight queries complete with 0
+unhandled errors; ``BENCH_serve.json["service"]`` records p50/p99 latency,
+qps, the batch-size histogram, and shed/429 counts):
+
+* graph: the ``bench_large.py`` quick config (livejournal stand-in, same
+  as ``bench_serve.py``), one :class:`SimRankService` over it behind the
+  threaded HTTP server (``serving/server.py``) on loopback;
+* ``CLIENTS`` closed-loop client threads, each holding ONE keep-alive
+  connection and issuing ``per_client`` sequential queries (so the
+  in-flight population is the full client herd minus whoever is between
+  requests) against a ``max_inflight`` bound BELOW the herd size — the
+  429 + ``Retry-After`` path is part of the measured protocol, not an
+  error;
+* per-request wall latency (enqueue-to-response, including 429 backoff)
+  feeds the p50/p99 figures; the service's own counters supply the
+  batch-size histogram and the shed/429/5xx tallies;
+* the gate is honest end-to-end: any client-side exception or 5xx is an
+  unhandled error and fails the bench.
+
+Results land in ``RESULTS['service']`` (promoted to the top level of
+``BENCH_serve.json`` next to the ``serve`` rows — ``write_json`` carries
+the other suite's rows forward).
+"""
+from __future__ import annotations
+
+import threading
+import time
+
+import numpy as np
+
+from benchmarks.common import RESULTS, emit, pick_query_nodes
+from repro.api import GraphHandle
+from repro.graph import paper_dataset
+from repro.serving import ServiceClient, ServiceConfig, SimRankService
+from repro.serving import start_server, stop_server
+
+C = 0.6
+CLIENTS = 256  # concurrent in-flight herd (acceptance floor)
+TOP_K = 50
+WALK_CHUNK = 256
+
+
+def run(
+    quick: bool = True,
+    backend: str = "local",
+    clients: int = CLIENTS,
+) -> dict:
+    name, scale = ("livejournal", 0.004)  # bench_large quick config
+    budget = 64 if quick else 512
+    per_client = 2 if quick else 8
+    src, dst, n = paper_dataset(name, scale=scale)
+    in_deg = np.bincount(dst, minlength=n)
+    handle = GraphHandle.from_edges(src, dst, n, k_max=int(in_deg.max()) + 1)
+    queries = pick_query_nodes(in_deg, 64)
+
+    cfg = ServiceConfig(
+        batch_window_ms=20.0,
+        max_batch_q=16,
+        # bound BELOW the herd so backpressure is exercised, not just
+        # configured: ~1/3 of the herd queues, the rest sees 429 + retry
+        max_inflight=max(2, int(clients * 0.75)),
+        default_budget_walks=budget,
+    )
+    svc = SimRankService(
+        handle, backend=backend, config=cfg,
+        session_kwargs=dict(c=C, eps_a=0.1, walk_chunk=WALK_CHUNK,
+                            top_k=TOP_K),
+    )
+    server, thread = start_server(svc)
+    host, port = server.server_address
+
+    # warm the fused-step compile cache before opening the floodgates so
+    # the timed window measures serving, not one giant first-batch trace
+    with ServiceClient(host, port) as cl:
+        cl.query(node=int(queries[0]), k=10)
+
+    latencies: list[list[float]] = [[] for _ in range(clients)]
+    failures: list[str] = []
+    barrier = threading.Barrier(clients + 1)
+
+    def client_loop(ci: int) -> None:
+        try:
+            with ServiceClient(host, port) as cl:
+                barrier.wait()
+                for j in range(per_client):
+                    u = int(queries[(ci * per_client + j) % len(queries)])
+                    t0 = time.monotonic()
+                    r = cl.query(node=u, k=10, seed=ci * 10_000 + j)
+                    latencies[ci].append(time.monotonic() - t0)
+                    if len(r["topk_nodes"]) != 10:
+                        raise RuntimeError(f"short topk: {r['topk_nodes']}")
+        except Exception as e:  # noqa: BLE001 — every failure is a gate
+            failures.append(f"client {ci}: {type(e).__name__}: {e}")
+
+    threads = [
+        threading.Thread(target=client_loop, args=(i,), daemon=True)
+        for i in range(clients)
+    ]
+    for t in threads:
+        t.start()
+    barrier.wait()  # all clients connected: the herd fires together
+    t_load0 = time.monotonic()
+    for t in threads:
+        t.join(timeout=600)
+    t_load = time.monotonic() - t_load0
+    alive = sum(t.is_alive() for t in threads)
+
+    stats = svc.stats_snapshot()["service"]
+    stop_server(server, thread)
+
+    lat = np.array([x for per in latencies for x in per])
+    total = clients * per_client
+    unhandled = len(failures) + alive + stats["errors_5xx"]
+    if failures:
+        for f in failures[:10]:
+            print(f"# FAIL {f}", flush=True)
+    p50 = float(np.percentile(lat, 50)) if lat.size else None
+    p99 = float(np.percentile(lat, 99)) if lat.size else None
+    qps = lat.size / t_load if t_load > 0 else 0.0
+    emit(
+        f"service/{name}/load_c{clients}",
+        (t_load / max(lat.size, 1)) * 1e6,
+        f"qps={qps:.2f};p50_s={p50:.4f};p99_s={p99:.4f};"
+        f"served={stats['served']};rejected_429={stats['rejected_429']};"
+        f"shed_504={stats['shed_504']};errors_5xx={stats['errors_5xx']};"
+        f"batches={stats['batches']};unhandled={unhandled}",
+    )
+    RESULTS["service"] = dict(
+        dataset=name,
+        scale=scale,
+        n=int(n),
+        m=int(len(src)),
+        backend=backend,
+        clients=clients,
+        per_client=per_client,
+        total_queries=total,
+        completed=int(lat.size),
+        budget_walks=budget,
+        batch_window_ms=cfg.batch_window_ms,
+        max_batch_q=cfg.max_batch_q,
+        max_inflight=cfg.max_inflight,
+        qps=float(qps),
+        p50_s=p50,
+        p99_s=p99,
+        elapsed_s=float(t_load),
+        batch_hist=stats["batch_hist"],
+        accepted=stats["accepted"],
+        served=stats["served"],
+        rejected_429=stats["rejected_429"],
+        shed_504=stats["shed_504"],
+        errors_5xx=stats["errors_5xx"],
+        batches=stats["batches"],
+        unhandled_errors=unhandled,
+        failures=failures[:10],
+    )
+    return RESULTS["service"]
+
+
+if __name__ == "__main__":
+    import argparse
+
+    from benchmarks.common import write_json
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--backend", choices=("local", "sharded"),
+                    default="local")
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--clients", type=int, default=CLIENTS)
+    args = ap.parse_args()
+    run(quick=not args.full, backend=args.backend, clients=args.clients)
+    write_json("BENCH_serve.json", quick=not args.full,
+               suites=["service"])

@@ -28,7 +28,8 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true",
                     help="CPU-quick profile (the default; negates --full)")
     ap.add_argument("--only", default=None,
-                    help="comma list: serve,abserror,topk,large,dynamic,kernels")
+                    help="comma list: serve,service,abserror,topk,large,"
+                         "dynamic,kernels")
     ap.add_argument("--backend", choices=("local", "sharded"), default="local",
                     help="forwarded to suites that take it (serve, dynamic): "
                          "'sharded' adds the mesh-backend comparison rows")
@@ -45,23 +46,25 @@ def main() -> None:
         bench_kernels,
         bench_large,
         bench_serve,
+        bench_service,
         bench_topk,
     )
     from benchmarks.common import RESULTS, ROWS, write_json
 
     suites = dict(
         serve=bench_serve.run,
+        service=bench_service.run,
         abserror=bench_abserror.run,
         topk=bench_topk.run,
         large=bench_large.run,
         dynamic=bench_dynamic.run,
         kernels=bench_kernels.run,
     )
-    takes_backend = {"serve", "dynamic"}  # suites with a mesh-backend leg
+    takes_backend = {"serve", "dynamic", "service"}  # mesh-backend legs
     # suites that must fill RESULTS[name]; abserror is structured too — it
     # used to print CSV rows and silently drop its metrics, so the
     # accuracy-gate job had nothing machine-readable to enforce
-    structured = {"serve", "dynamic", "abserror"}
+    structured = {"serve", "dynamic", "abserror", "service"}
     chosen = args.only.split(",") if args.only else list(suites)
     unknown = [name for name in chosen if name not in suites]
     if unknown:
@@ -95,7 +98,7 @@ def main() -> None:
     else:
         # one artifact per acceptance consumer, written iff its suite ran
         # (so other suites never clobber an existing artifact)
-        if "serve" in chosen:
+        if "serve" in chosen or "service" in chosen:
             write_json("BENCH_serve.json", quick=quick, suites=chosen)
         if "dynamic" in chosen:
             write_json("BENCH_dynamic.json", quick=quick, suites=chosen)

@@ -100,6 +100,29 @@ def main():
           f"{len(ep.results)} query in one compiled dispatch "
           f"({ep.results[0].variant})")
 
+    # --- serving over HTTP: the network front end (DESIGN.md §8) ----------
+    # SimRankService cuts concurrent clients' queries into micro-batches
+    # (one fused dispatch per cut), bounds admission (429 + Retry-After),
+    # and routes X-Tenant headers to per-tenant sessions over ONE shared
+    # graph.  start_server binds a stdlib ThreadingHTTPServer over it.
+    from repro.serving import (ServiceClient, ServiceConfig, SimRankService,
+                               start_server, stop_server)
+
+    svc = SimRankService(handle, config=ServiceConfig(
+        batch_window_ms=5.0, default_budget_walks=256))
+    server, thread = start_server(svc)  # port=0 picks a free port
+    host, port = server.server_address
+    client = ServiceClient(host, port, tenant="quickstart")
+    reply = client.query(node=0, kind="topk", k=3, seed=7)
+    print(f"HTTP top-3 for 'a' (tenant={reply['tenant']}, "
+          f"batch_size={reply['batch_size']}):",
+          [("abcdefgh"[i], round(s, 4))
+           for i, s in zip(reply["topk_nodes"], reply["topk_scores"])])
+    rep = client.update(inserts=[(5, 0)])  # serialized; bumps the version
+    assert client.healthz()["version"] == rep["version"]
+    client.close()
+    stop_server(server, thread)  # drains in-flight requests, then closes
+
 
 if __name__ == "__main__":
     main()

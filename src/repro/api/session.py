@@ -57,6 +57,7 @@ bound evaluated at that effective budget.
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 import warnings
 from collections import deque
@@ -237,6 +238,14 @@ class SimRankSession:
     its own PRNG stream — ``fold_in(session_seed, submission_seq)`` — at
     submit/query time, so batch composition never changes an answer
     (docs/api.md, "PRNG-stream determinism contract").
+
+    Thread safety: ``submit``/``drain``/``query``/``update``/``epoch``
+    compose under concurrent callers — one re-entrant session lock
+    serializes queue mutation, PRNG-stream assignment, ticket fills and
+    graph mutation (the HTTP serving front end drives one session from
+    handler and collector threads at once).  Dispatches run inside the
+    lock, so a long drain blocks concurrent submitters for its duration;
+    answers remain determined by each query's submit-time stream alone.
     """
 
     def __init__(
@@ -375,6 +384,15 @@ class SimRankSession:
         # else; caller-pinned spec.key bypasses both rekey and cache.
         self._probe_cache = ProbeCache(probe_cache_entries)
         self._hub_root = jax.random.fold_in(self.key, 0x5B5B)
+        # one re-entrant lock serializes every path that mutates shared
+        # session state — the submission queues, the seq counter behind the
+        # PRNG streams, ticket fills, and graph mutation — so concurrent
+        # callers (the serving front end's handler + collector threads)
+        # compose safely.  Re-entrant because epoch() routes through
+        # submit()/queue_update(), and drain() through _serve_next_batch().
+        # Dispatches run INSIDE the lock: answers stay batch-composition
+        # deterministic and two threads can never double-serve one ticket.
+        self._lock = threading.RLock()
 
     # -- snapshot state ------------------------------------------------------
 
@@ -399,8 +417,9 @@ class SimRankSession:
 
     def regrow(self, **kwargs) -> None:
         """Manual capacity recovery (see :meth:`GraphHandle.regrow`)."""
-        self.backend.regrow(**kwargs)
-        self.stats.regrows += 1
+        with self._lock:
+            self.backend.regrow(**kwargs)
+            self.stats.regrows += 1
 
     def record_retry(self, n: int = 1) -> None:
         """Public hook for dispatch-layer retries (straggler policies).
@@ -417,9 +436,10 @@ class SimRankSession:
     # -- PRNG streams --------------------------------------------------------
 
     def _query_key(self) -> Array:
-        k = jax.random.fold_in(self.key, self._seq)
-        self._seq += 1
-        return k
+        with self._lock:
+            k = jax.random.fold_in(self.key, self._seq)
+            self._seq += 1
+            return k
 
     # -- planner -------------------------------------------------------------
 
@@ -484,13 +504,18 @@ class SimRankSession:
         if budget_walks is not None and spec.budget_walks is None:
             spec = dataclasses.replace(spec, budget_walks=budget_walks)
         if spec.epsilon is not None:
-            return self._query_adaptive(spec, deadline_s=deadline_s)
+            with self._lock:
+                return self._query_adaptive(spec, deadline_s=deadline_s)
         if deadline_s is not None:
             raise ValueError(
                 "deadline_s clamps the adaptive escalation loop — it "
                 "requires a spec with epsilon set (for flat-budget specs "
                 "use serving.straggler.dispatch around query())"
             )
+        with self._lock:
+            return self._query_flat(spec)
+
+    def _query_flat(self, spec: QuerySpec) -> ResultEnvelope:
         variant = self.plan(spec)
         n_r = spec.budget_walks or self.params.n_r
         t0 = time.time()
@@ -750,14 +775,15 @@ class SimRankSession:
                 "queued serving uses the fused telescoped path; "
                 f"variant={spec.variant!r} is only available via query()"
             )
-        if spec.key is not None:
-            key, seq = spec.key, -1  # caller-pinned stream
-        else:
-            seq = self._seq
-            key = self._query_key()
-        ticket = QueryTicket(spec=spec, seq=seq, _session=self)
-        self.query_queue.append((spec, key, ticket))
-        return ticket
+        with self._lock:
+            if spec.key is not None:
+                key, seq = spec.key, -1  # caller-pinned stream
+            else:
+                seq = self._seq
+                key = self._query_key()
+            ticket = QueryTicket(spec=spec, seq=seq, _session=self)
+            self.query_queue.append((spec, key, ticket))
+            return ticket
 
     def _batch_group(self, spec: QuerySpec):
         """Specs that can share one fused dispatch (same shapes/budget).
@@ -832,14 +858,22 @@ class SimRankSession:
     def _serve_next_batch(
         self, budget_walks: int | None
     ) -> list[ResultEnvelope]:
-        """Pop + serve ONE fused batch; fills tickets for the live slice."""
-        batch, live = self._pop_query_batch()
-        served = self._serve_fused(batch, budget_walks)[:live]
-        for item, env in zip(batch[:live], served):
-            if len(item) > 2 and item[2] is not None:
-                item[2].envelope = env
-        self.stats.queries += live
-        return served
+        """Pop + serve ONE fused batch; fills tickets for the live slice.
+
+        Returns ``[]`` when the queue is already empty — a concurrent
+        drain on another thread may have consumed it between our caller's
+        check and the lock acquisition here.
+        """
+        with self._lock:
+            if not self.query_queue:
+                return []
+            batch, live = self._pop_query_batch()
+            served = self._serve_fused(batch, budget_walks)[:live]
+            for item, env in zip(batch[:live], served):
+                if len(item) > 2 and item[2] is not None:
+                    item[2].envelope = env
+            self.stats.queries += live
+            return served
 
     def drain(self, *, budget_walks: int | None = None) -> list[ResultEnvelope]:
         """Serve every queued spec in fused batches of ``batch_q``.
@@ -851,22 +885,24 @@ class SimRankSession:
         Tickets already forced via ``result()`` have left the queue — the
         returned list covers what was still queued, in order.
         """
-        out: list[ResultEnvelope] = []
-        while self.query_queue:
-            out.extend(self._serve_next_batch(budget_walks))
-        return out
+        with self._lock:
+            out: list[ResultEnvelope] = []
+            while self.query_queue:
+                out.extend(self._serve_next_batch(budget_walks))
+            return out
 
     def _drain_until(
         self, ticket: QueryTicket, *, budget_walks: int | None = None
     ) -> None:
         """Serve queued batches (submission order) until ``ticket`` is done."""
-        while ticket.envelope is None and self.query_queue:
-            self._serve_next_batch(budget_walks)
-        if ticket.envelope is None:
-            raise RuntimeError(
-                "ticket is not queued in this session (was the queue "
-                "consumed by an epoch of a different session?)"
-            )
+        with self._lock:
+            while ticket.envelope is None and self.query_queue:
+                self._serve_next_batch(budget_walks)
+            if ticket.envelope is None:
+                raise RuntimeError(
+                    "ticket is not queued in this session (was the queue "
+                    "consumed by an epoch of a different session?)"
+                )
 
     # -- immediate updates ---------------------------------------------------
 
@@ -902,22 +938,23 @@ class SimRankSession:
         regrow and are retried until applied; otherwise they are surfaced
         in ``UpdateReport.skipped``.
         """
-        rep = UpdateReport()
-        if inserts is not None:
-            s, d = self._as_ops(inserts)
-            self._validate_ops(s, d)
-            self._apply_now(s, d, True, rep)
-        if deletes is not None:
-            s, d = self._as_ops(deletes)
-            self._validate_ops(s, d)
-            if s.shape[0]:
-                occ = _occurrence_numbers(s, d, self.backend.n)
-                for k in range(int(occ.max()) + 1):
-                    m = occ == k
-                    self._apply_now(s[m], d[m], False, rep)
-        rep.version = self.version
-        rep.overflow = self.overflow
-        return rep
+        with self._lock:
+            rep = UpdateReport()
+            if inserts is not None:
+                s, d = self._as_ops(inserts)
+                self._validate_ops(s, d)
+                self._apply_now(s, d, True, rep)
+            if deletes is not None:
+                s, d = self._as_ops(deletes)
+                self._validate_ops(s, d)
+                if s.shape[0]:
+                    occ = _occurrence_numbers(s, d, self.backend.n)
+                    for k in range(int(occ.max()) + 1):
+                        m = occ == k
+                        self._apply_now(s[m], d[m], False, rep)
+            rep.version = self.version
+            rep.overflow = self.overflow
+            return rep
 
     def _apply_now(
         self, src: np.ndarray, dst: np.ndarray, insert: bool, rep: UpdateReport
@@ -954,8 +991,9 @@ class SimRankSession:
         """Enqueue edge ops for the next :meth:`epoch` step(s)."""
         s, d = self._as_ops((src, dst))
         self._validate_ops(s, d)
-        for a, b in zip(s, d):
-            self.update_queue.append((int(a), int(b), insert))
+        with self._lock:
+            for a, b in zip(s, d):
+                self.update_queue.append((int(a), int(b), insert))
 
     def _pop_updates(self) -> tuple[list[tuple[int, int, bool]], UpdateBatch]:
         # apply_update_batch runs its delete phase before its insert phase
@@ -1026,6 +1064,15 @@ class SimRankSession:
                 "epoch() requires an owned graph: construct the session "
                 "from a GraphHandle with own_graph=True (the default)"
             )
+        with self._lock:
+            return self._epoch_locked(
+                inserts=inserts, deletes=deletes, queries=queries,
+                budget_walks=budget_walks,
+            )
+
+    def _epoch_locked(
+        self, *, inserts, deletes, queries, budget_walks
+    ) -> EpochResult:
         if inserts is not None:
             self.queue_update(*self._as_ops(inserts), insert=True)
         if deletes is not None:
@@ -1124,7 +1171,8 @@ class SimRankSession:
         self, *, budget_walks: int | None = None
     ) -> list[EpochResult]:
         """Run epochs until both queues are empty."""
-        out: list[EpochResult] = []
-        while self.update_queue or self.query_queue:
-            out.append(self.epoch(budget_walks=budget_walks))
-        return out
+        with self._lock:
+            out: list[EpochResult] = []
+            while self.update_queue or self.query_queue:
+                out.append(self.epoch(budget_walks=budget_walks))
+            return out

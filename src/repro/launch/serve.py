@@ -23,12 +23,21 @@ flat Thm-1 budget).  Combined with ``--deadline-s`` the deadline rides
 in-band (``straggler.dispatch_adaptive``): a miss degrades to the
 best-so-far certificate instead of a shed retry.
 
+``--serve`` starts the network service instead of the driver loop: the
+threaded HTTP front end (``serving/server.py``) over a
+:class:`SimRankService` (micro-batching window, admission control,
+per-tenant sessions) on ``--host``/``--port``, local or
+``--backend sharded``.  The driver's graph flags build the served graph;
+``--batch-window-ms`` / ``--max-batch-q`` / ``--max-inflight`` tune the
+collector.  Ctrl-C shuts down gracefully (drains in-flight requests).
+
 Usage:
   python -m repro.launch.serve --nodes 20000 --edges 200000 --queries 20 \
       --updates-per-batch 100 --eps-a 0.1
   python -m repro.launch.serve --queries 20 --epsilon 0.1 --deadline-s 2.0
   XLA_FLAGS=--xla_force_host_platform_device_count=8 \
       python -m repro.launch.serve --backend sharded --shards 4 --epochs
+  python -m repro.launch.serve --serve --port 8311 --walk-budget 512
 """
 from __future__ import annotations
 
@@ -65,10 +74,26 @@ def main() -> None:
     ap.add_argument("--epochs", action="store_true",
                     help="serve each update burst + query as ONE fused "
                          "epoch dispatch instead of update() + query()")
+    ap.add_argument("--serve", action="store_true",
+                    help="start the HTTP serving front end instead of the "
+                         "driver loop (POST /query, POST /update, "
+                         "GET /stats, GET /healthz)")
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=8311)
+    ap.add_argument("--batch-window-ms", type=float, default=10.0,
+                    help="--serve: micro-batch collector window")
+    ap.add_argument("--max-batch-q", type=int, default=16,
+                    help="--serve: fused-dispatch lane count (batch cut "
+                         "fires early when this many queries wait)")
+    ap.add_argument("--max-inflight", type=int, default=256,
+                    help="--serve: admission bound; past it clients get "
+                         "429 + Retry-After")
     args = ap.parse_args()
     if args.epsilon is not None and args.epochs:
-        ap.error("--epsilon queries are served by the host-side escalation "
-                 "loop and cannot ride inside a fused --epochs dispatch")
+        ap.error("--epsilon and --epochs are mutually exclusive: --epsilon "
+                 "queries are served by the host-side escalation loop and "
+                 "cannot ride inside a fused --epochs dispatch — drop one "
+                 "of the two flags")
 
     from repro.graph import powerlaw_graph
 
@@ -85,6 +110,11 @@ def main() -> None:
     shards = args.shards
     if args.backend == "sharded" and shards is None:
         shards = len(jax.devices())
+
+    if args.serve:
+        _serve_forever(handle, args, shards, n=n, m=len(src))
+        return
+
     sess = SimRankSession(
         handle, c=args.c, eps_a=args.eps_a, top_k=args.top_k, seed=args.seed,
         backend=args.backend, shards=shards,
@@ -184,6 +214,43 @@ def main() -> None:
           + (f"; escalations: {sess.stats.escalations}; "
              f"hub hits: {sess.stats.hub_hits}"
              if args.epsilon is not None else ""))
+
+
+def _serve_forever(handle, args, shards, *, n: int, m: int) -> None:
+    """--serve mode: run the HTTP service until interrupted."""
+    from repro.serving import ServiceConfig, SimRankService, start_server
+    from repro.serving import stop_server
+
+    svc = SimRankService(
+        handle,
+        backend=args.backend,
+        shards=shards,
+        config=ServiceConfig(
+            batch_window_ms=args.batch_window_ms,
+            max_batch_q=args.max_batch_q,
+            max_inflight=args.max_inflight,
+            default_budget_walks=args.walk_budget,
+        ),
+        seed=args.seed,
+        session_kwargs=dict(c=args.c, eps_a=args.eps_a, top_k=args.top_k),
+    )
+    server, thread = start_server(svc, args.host, args.port)
+    host, port = server.server_address
+    print(f"serving n={n} m={m} on http://{host}:{port} "
+          f"(backend={args.backend}"
+          + (f" shards={shards}" if args.backend == "sharded" else "")
+          + f", window={args.batch_window_ms}ms, "
+          f"batch_q={args.max_batch_q}, max_inflight={args.max_inflight}); "
+          "POST /query /update, GET /stats /healthz; Ctrl-C to stop",
+          flush=True)
+    try:
+        # polling join: a bare join() parks in an uninterruptible C-level
+        # acquire on some platforms; this stays responsive to Ctrl-C
+        while thread.is_alive():
+            thread.join(timeout=0.5)
+    except KeyboardInterrupt:
+        print("\nshutting down (draining in-flight requests)...", flush=True)
+        stop_server(server, thread)
 
 
 if __name__ == "__main__":

@@ -1,15 +1,48 @@
-"""repro.serving — deprecated engines (shims over ``repro.api``) + straggler.
+"""repro.serving — the network serving subsystem (+ deprecated engines).
 
-``SimRankEngine`` and ``DynamicEngine`` delegate to
-``repro.api.SimRankSession``; new code should use the session directly.
+The serving stack is three layers, thin to thick:
+
+* ``serving.protocol`` — the JSON wire schema (requests, responses,
+  :class:`ProtocolError`); stdlib + numpy only, importable by clients.
+* ``serving.service`` — :class:`SimRankService`: micro-batching window,
+  admission control/backpressure, per-tenant sessions over shared graph
+  state, serialized updates.  All policy, no sockets.
+* ``serving.server`` — the threaded HTTP front end
+  (:func:`start_server` / :class:`SimRankHTTPServer`) and the matching
+  keep-alive :class:`ServiceClient`.
+
 ``serving.straggler`` (deadline/hedge/shed dispatch policies) remains the
 canonical home for tail-latency mitigation around any query callable —
 callers that track re-dispatches against a session report them through
 ``SimRankSession.record_retry()`` (the stats object is owned by the
 session/backend pair; never mutate its fields from outside).
+
+``SimRankEngine`` and ``DynamicEngine`` are deprecated shims over
+``repro.api.SimRankSession``; new code should use the session directly.
 """
 from repro.serving.dynamic_engine import DynamicEngine, DynamicStats, EpochResult
 from repro.serving.engine import EngineStats, QueryResult, SimRankEngine
+from repro.serving.protocol import (
+    ProtocolError,
+    QueryRequest,
+    envelope_to_wire,
+    parse_query_request,
+    parse_update_request,
+    update_report_to_wire,
+)
+from repro.serving.server import (
+    ServiceClient,
+    SimRankHTTPServer,
+    start_server,
+    stop_server,
+)
+from repro.serving.service import (
+    AdmissionError,
+    ServiceClosed,
+    ServiceConfig,
+    ServiceStats,
+    SimRankService,
+)
 
 __all__ = [
     "SimRankEngine",
@@ -18,4 +51,19 @@ __all__ = [
     "EpochResult",
     "EngineStats",
     "DynamicStats",
+    "ProtocolError",
+    "QueryRequest",
+    "parse_query_request",
+    "parse_update_request",
+    "envelope_to_wire",
+    "update_report_to_wire",
+    "SimRankService",
+    "ServiceConfig",
+    "ServiceStats",
+    "AdmissionError",
+    "ServiceClosed",
+    "SimRankHTTPServer",
+    "ServiceClient",
+    "start_server",
+    "stop_server",
 ]

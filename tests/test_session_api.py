@@ -530,3 +530,65 @@ def test_session_stats_threading(er_session):
     assert s.steps == 3  # query() + 1 drain batch + 1 epoch dispatch
     assert s.updates == 1 and s.epochs == 1
     assert s.as_dict()["queries"] == 4
+
+
+def test_concurrent_submit_drain_thread_safe():
+    """Many threads submitting (+ some draining) concurrently: every
+    ticket gets exactly its own answer, bitwise-equal to a solo replay.
+
+    This is the contract the serving collector (serving/service.py)
+    builds on: handler threads call ``submit()`` while the collector
+    drains, and the lock around queue mutation + ticket fill must keep
+    (spec, key, ticket) triples intact under interleaving.
+    """
+    import threading
+
+    src, dst, n = erdos_renyi_graph(60, 300, seed=5)
+    h = GraphHandle.from_edges(src, dst, n)
+    sess = SimRankSession(h, c=0.3, eps_a=0.3, top_k=3, batch_q=4, seed=0)
+    sess.query(QuerySpec(kind="topk", node=0, budget_walks=16))  # warm jit
+
+    T, PER = 8, 6
+    tickets = [[None] * PER for _ in range(T)]
+    barrier = threading.Barrier(T)
+
+    def worker(t):
+        barrier.wait()
+        for j in range(PER):
+            q = (t * PER + j) % n
+            tickets[t][j] = sess.submit(QuerySpec(
+                kind="topk", node=q, k=3, budget_walks=16,
+                key=jax.random.key(10_000 + t * PER + j),
+            ))
+            if j % 3 == 2:
+                sess.drain(budget_walks=16)
+
+    threads = [threading.Thread(target=worker, args=(t,)) for t in range(T)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=120)
+    sess.drain(budget_walks=16)
+
+    assert sess.stats.queries == T * PER + 1  # + the warm-jit query()
+    assert not sess.query_queue
+    ref = SimRankSession(h, c=0.3, eps_a=0.3, top_k=3, batch_q=4, seed=99)
+    for t in range(T):
+        for j in range(PER):
+            tk = tickets[t][j]
+            assert tk is not None and tk.envelope is not None
+            q = (t * PER + j) % n
+            assert tk.envelope.node == q
+            rtk = ref.submit(QuerySpec(
+                kind="topk", node=q, k=3, budget_walks=16,
+                key=jax.random.key(10_000 + t * PER + j),
+            ))
+            ref.drain()
+            np.testing.assert_array_equal(
+                np.asarray(tk.envelope.topk_nodes),
+                np.asarray(rtk.envelope.topk_nodes),
+            )
+            np.testing.assert_array_equal(
+                np.asarray(tk.envelope.topk_scores),
+                np.asarray(rtk.envelope.topk_scores),
+            )
