@@ -1,0 +1,233 @@
+"""Temporal stream workload: freshness SLO + pooled effectiveness under churn.
+
+The ProbeSim claim made operational: index-free SimRank should stay fresh
+and accurate while the graph itself is a *stream* — timestamped arrivals,
+a TTL sliding window shedding delete-heavy expiry batches, and query
+traffic interleaved with the ingest.  Four scenarios through
+``repro.streams`` (DESIGN.md §9):
+
+* **steady** — Poisson arrivals at a sustained rate through the fused
+  epoch path; per-query staleness (wall age of the oldest unapplied op at
+  answer time) at p50/p99 against the scenario's freshness SLO.
+* **turnover** — TTL of a couple of ticks, so nearly every arrival comes
+  back as an expiry delete: the delete-heavy window-maintenance regime.
+* **bursty** — on/off modulated arrivals through the PR-8 network service
+  (micro-batch window + admission control): burst ingest vs qps, with
+  any admission 429s counted.
+* **pooled** — periodic checkpoints freeze the live window and score the
+  served top-10 against the §6.2 expert pool (with a fresh-rebuild scout
+  contributing candidates), so precision@10 is tracked as the graph
+  churns.
+
+Results land in ``benchmarks.common.RESULTS['stream']`` and are written to
+``BENCH_stream.json`` by ``run.py``.  CI's stream-smoke job gates
+staleness_p99 under the quick SLO, zero sticky overflow, and a final
+pooled p@10 >= 0.8.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import RESULTS, emit
+from repro.api import GraphHandle, SimRankSession
+from repro.streams import (
+    FreshnessSLO,
+    ServiceTransport,
+    SessionTransport,
+    StreamDriver,
+    bursty_edge_stream,
+    poisson_edge_stream,
+)
+
+C = 0.6
+K = 10
+
+
+def _empty_handle(n: int, capacity: int, k_max: int) -> GraphHandle:
+    return GraphHandle.from_edges(
+        np.empty(0, np.int32), np.empty(0, np.int32), n,
+        capacity=capacity, k_max=k_max,
+    )
+
+
+def _session(n, capacity, k_max, *, backend="local", batch_q=4, seed=0):
+    return SimRankSession(
+        _empty_handle(n, capacity, k_max), c=C, top_k=K, seed=seed,
+        batch_q=batch_q, backend=backend,
+    )
+
+
+def _rep_row(rep) -> str:
+    return (
+        f"qps={rep.qps:.1f},stale_p50={rep.staleness_p50_s * 1e3:.1f}ms,"
+        f"stale_p99={rep.staleness_p99_s * 1e3:.1f}ms,"
+        f"lag_p99={rep.version_lag_p99:.0f},applied={rep.updates_applied},"
+        f"expired={rep.expired},overflow={rep.sticky_overflow}"
+    )
+
+
+def _rep_dict(rep) -> dict:
+    return dict(
+        qps=rep.qps,
+        queries=rep.queries,
+        staleness_p50_s=rep.staleness_p50_s,
+        staleness_p99_s=rep.staleness_p99_s,
+        version_lag_p50=rep.version_lag_p50,
+        version_lag_p99=rep.version_lag_p99,
+        arrivals=rep.arrivals,
+        expired=rep.expired,
+        updates_applied=rep.updates_applied,
+        update_steps=rep.update_steps,
+        rejected_429=rep.rejected_429,
+        duration_s=rep.duration_s,
+        final_live_edges=rep.final_live_edges,
+        sticky_overflow=rep.sticky_overflow,
+        slo_met=rep.slo_met,
+    )
+
+
+def run(quick: bool = True, backend: str = "local") -> None:
+    if quick:
+        n, rate, horizon = 500, 4_000, 1.5
+        capacity, k_max = 8_192, 128
+        tick_s, burst = 0.05, 128
+        budget, slo_p99 = 256, 1.0
+        expert_r, fresh_budget = 2_000, 2_048
+    else:
+        n, rate, horizon = 2_000, 20_000, 3.0
+        capacity, k_max = 65_536, 256
+        tick_s, burst = 0.05, 512
+        budget, slo_p99 = 512, 0.5
+        expert_r, fresh_budget = 20_000, 8_192
+    slo = FreshnessSLO(staleness_p99_s=slo_p99)
+    common = dict(tick_s=tick_s, update_burst=burst, k=K,
+                  budget_walks=budget)
+
+    # -- warmup: compile every shape the scenarios reuse (update buckets,
+    # fused epoch/serve steps) on a throwaway window that drains to empty,
+    # so compile time never pollutes a staleness percentile
+    warm = poisson_edge_stream(n, rate=rate, horizon=4 * tick_s, seed=99)
+    for mode in ("epoch", "drain"):
+        StreamDriver(
+            SessionTransport(_session(n, capacity, k_max), mode=mode),
+            warm, ttl=2 * tick_s, queries_per_tick=2, **common,
+        ).run(final_expire=True)
+
+    results: dict = dict(n=n, rate=rate, horizon=horizon, k=K,
+                         tick_s=tick_s, update_burst=burst,
+                         budget_walks=budget, backend="local")
+
+    # -- steady: sustained Poisson load through the fused epoch path
+    stream = poisson_edge_stream(n, rate=rate, horizon=horizon, seed=0)
+    drv = StreamDriver(
+        SessionTransport(_session(n, capacity, k_max), mode="epoch"),
+        stream, ttl=0.5, queries_per_tick=2, slo=slo, **common,
+    )
+    rep = drv.run()
+    emit("stream/steady_staleness_p99", rep.staleness_p99_s * 1e6,
+         _rep_row(rep))
+    results["steady"] = dict(
+        _rep_dict(rep), ttl=0.5, slo_staleness_p99_s=slo_p99,
+        transport="session/epoch",
+    )
+
+    # -- turnover: TTL of two ticks -> nearly every arrival expires
+    drv = StreamDriver(
+        SessionTransport(_session(n, capacity, k_max), mode="epoch"),
+        stream, ttl=2 * tick_s, queries_per_tick=2, slo=slo, **common,
+    )
+    rep = drv.run(final_expire=True)
+    delete_frac = rep.expired / max(1, rep.updates_applied)
+    emit("stream/turnover_staleness_p99", rep.staleness_p99_s * 1e6,
+         _rep_row(rep) + f",delete_frac={delete_frac:.2f}")
+    results["turnover"] = dict(
+        _rep_dict(rep), ttl=2 * tick_s, delete_fraction=delete_frac,
+        slo_staleness_p99_s=slo_p99, transport="session/epoch",
+    )
+
+    # -- bursty: on/off ingest through the PR-8 service front end
+    from repro.serving import ServiceConfig, SimRankService
+
+    bstream = bursty_edge_stream(
+        n, rate_on=2 * rate, mean_on=0.15, mean_off=0.3,
+        horizon=horizon, seed=1,
+    )
+    with SimRankService(
+        _empty_handle(n, capacity, k_max),
+        config=ServiceConfig(batch_window_ms=2.0, max_batch_q=4,
+                             default_budget_walks=budget),
+        session_kwargs=dict(c=C, top_k=K),
+    ) as svc:
+        drv = StreamDriver(
+            ServiceTransport(svc, tenant="stream"), bstream,
+            ttl=0.3, queries_per_tick=2, slo=slo, **common,
+        )
+        rep = drv.run()
+    emit("stream/bursty_qps", 1e6 / max(rep.qps, 1e-9),
+         _rep_row(rep) + f",rejected_429={rep.rejected_429}")
+    results["bursty"] = dict(
+        _rep_dict(rep), ttl=0.3, slo_staleness_p99_s=slo_p99,
+        transport="service",
+    )
+
+    # -- pooled effectiveness trajectory under churn
+    n_ticks = int(np.ceil(horizon / tick_s))
+    drv = StreamDriver(
+        SessionTransport(_session(n, capacity, k_max), mode="drain"),
+        stream, ttl=0.5, queries_per_tick=1,
+        checkpoint_every=max(1, n_ticks // 3), checkpoint_queries=4,
+        expert_r=expert_r, fresh_budget=fresh_budget, slo=slo,
+        **dict(common, budget_walks=max(budget, 1_024)),
+    )
+    rep = drv.run()
+    traj = [cp.as_dict() for cp in rep.checkpoints]
+    final_p = rep.final_precision_at_k
+    emit("stream/pooled_precision_at_10", (1.0 - (final_p or 0.0)) * 1e6,
+         ",".join(f"t={cp.t:.2f}:p@{K}={cp.precision_at_k:.2f}"
+                  for cp in rep.checkpoints))
+    results["pooled"] = dict(
+        k=K, expert_r=expert_r, fresh_budget=fresh_budget,
+        trajectory=traj,
+        final_precision_at_10=final_p,
+        final_ndcg_at_10=(rep.checkpoints[-1].ndcg_at_k
+                          if rep.checkpoints else None),
+        sticky_overflow=rep.sticky_overflow,
+    )
+
+    # -- sharded leg: the same steady scenario over the mesh backend
+    if backend == "sharded":
+        sh_stream = poisson_edge_stream(
+            n, rate=rate // 2, horizon=horizon / 2, seed=0
+        )
+        sess = _session(n, capacity, k_max, backend="sharded")
+        shards = sess.backend.state.shards
+        drv = StreamDriver(
+            SessionTransport(sess, mode="drain"), sh_stream,
+            ttl=0.5, queries_per_tick=1, slo=slo, **common,
+        )
+        # warm the mesh programs, then drain back to the empty window
+        drv.run(max_ticks=2, final_expire=True)
+        rep = drv.run()
+        emit("stream/sharded_staleness_p99", rep.staleness_p99_s * 1e6,
+             _rep_row(rep) + f",shards={shards}")
+        results["sharded"] = dict(
+            _rep_dict(rep), ttl=0.5, shards=shards,
+            slo_staleness_p99_s=slo_p99, transport="session-sharded/drain",
+        )
+        results["backend"] = "sharded"
+
+    RESULTS["stream"] = results
+
+
+if __name__ == "__main__":  # run as `python -m benchmarks.bench_stream`
+    import argparse
+
+    from benchmarks.common import write_json
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--backend", choices=("local", "sharded"),
+                    default="local")
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    run(quick=not args.full, backend=args.backend)
+    write_json("BENCH_stream.json", quick=not args.full, suites=["stream"])

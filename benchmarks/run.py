@@ -29,10 +29,11 @@ def main() -> None:
                     help="CPU-quick profile (the default; negates --full)")
     ap.add_argument("--only", default=None,
                     help="comma list: serve,service,abserror,topk,large,"
-                         "dynamic,kernels")
+                         "dynamic,kernels,stream")
     ap.add_argument("--backend", choices=("local", "sharded"), default="local",
-                    help="forwarded to suites that take it (serve, dynamic): "
-                         "'sharded' adds the mesh-backend comparison rows")
+                    help="forwarded to suites that take it (serve, dynamic, "
+                         "service, stream): 'sharded' adds the mesh-backend "
+                         "comparison rows")
     ap.add_argument("--json", default=None,
                     help="machine-readable output path; by default "
                          "BENCH_serve.json is written iff the serve suite ran "
@@ -47,6 +48,7 @@ def main() -> None:
         bench_large,
         bench_serve,
         bench_service,
+        bench_stream,
         bench_topk,
     )
     from benchmarks.common import RESULTS, ROWS, write_json
@@ -59,12 +61,13 @@ def main() -> None:
         large=bench_large.run,
         dynamic=bench_dynamic.run,
         kernels=bench_kernels.run,
+        stream=bench_stream.run,
     )
-    takes_backend = {"serve", "dynamic", "service"}  # mesh-backend legs
+    takes_backend = {"serve", "dynamic", "service", "stream"}  # mesh legs
     # suites that must fill RESULTS[name]; abserror is structured too — it
     # used to print CSV rows and silently drop its metrics, so the
     # accuracy-gate job had nothing machine-readable to enforce
-    structured = {"serve", "dynamic", "abserror", "service"}
+    structured = {"serve", "dynamic", "abserror", "service", "stream"}
     chosen = args.only.split(",") if args.only else list(suites)
     unknown = [name for name in chosen if name not in suites]
     if unknown:
@@ -104,6 +107,8 @@ def main() -> None:
             write_json("BENCH_dynamic.json", quick=quick, suites=chosen)
         if "abserror" in chosen:
             write_json("BENCH_abserror.json", quick=quick, suites=chosen)
+        if "stream" in chosen:
+            write_json("BENCH_stream.json", quick=quick, suites=chosen)
 
 
 if __name__ == "__main__":

@@ -99,6 +99,10 @@ class ServiceConfig:
     cut for one tenant is exactly one fused dispatch.  ``max_inflight``
     bounds accepted-but-unanswered requests across all tenants; past it,
     enqueue raises :class:`AdmissionError` (429).
+    ``tenant_max_inflight`` additionally bounds any SINGLE tenant's share
+    of those slots (None = no per-tenant cap): a greedy tenant 429s at its
+    own quota while a quiet tenant's requests still admit, so one hot
+    tenant cannot starve the rest of the fleet.
     ``default_budget_walks`` caps queries that don't pin their own budget
     (None = the session's flat Thm-1 budget — usually far too many walks
     for interactive serving, so set this).  ``min_adaptive_deadline_s``
@@ -110,6 +114,7 @@ class ServiceConfig:
     batch_window_ms: float = 10.0
     max_batch_q: int = 16
     max_inflight: int = 256
+    tenant_max_inflight: int | None = None
     default_budget_walks: int | None = None
     response_timeout_s: float = 600.0
     adaptive_backstop_factor: float = 4.0
@@ -122,6 +127,11 @@ class ServiceConfig:
             raise ValueError("max_batch_q must be >= 1")
         if self.max_inflight < 1:
             raise ValueError("max_inflight must be >= 1")
+        if (
+            self.tenant_max_inflight is not None
+            and self.tenant_max_inflight < 1
+        ):
+            raise ValueError("tenant_max_inflight must be >= 1 (or None)")
 
 
 @dataclass
@@ -264,6 +274,7 @@ class SimRankService:
         self._ewma_batch_s = max(self.config.batch_window_ms / 1e3, 1e-3)
         self._pending: deque[_PendingQuery] = deque()
         self._inflight = 0
+        self._tenant_inflight: dict[str, int] = {}
         self._closed = False
         self._collector = threading.Thread(
             target=self._collector_loop, daemon=True,
@@ -321,17 +332,19 @@ class SimRankService:
 
     # -- query path ----------------------------------------------------------
 
-    def _retry_after_s(self, depth: int) -> float:
+    def _retry_after_s(self, depth: int, limit: int | None = None) -> float:
         """How long a 429'd client should back off: the time until an
         admission slot frees, i.e. enough cuts to work off the overshoot
-        past ``max_inflight`` — one batch completion usually frees a
-        whole batch of slots.  Each cut is costed at the OBSERVED batch
-        service time (EWMA, floored at the window): a window-only hint
-        under-estimates badly once dispatch time dominates (retry
-        storms), while a drain-the-whole-queue hint over-sleeps the herd
-        and idles the collector."""
+        past the violated bound (``max_inflight`` globally, or the
+        tenant's quota when ``limit`` is passed) — one batch completion
+        usually frees a whole batch of slots.  Each cut is costed at the
+        OBSERVED batch service time (EWMA, floored at the window): a
+        window-only hint under-estimates badly once dispatch time
+        dominates (retry storms), while a drain-the-whole-queue hint
+        over-sleeps the herd and idles the collector."""
         window_s = max(self.config.batch_window_ms / 1e3, 1e-3)
-        overshoot = max(1, depth - self.config.max_inflight + 1)
+        bound = self.config.max_inflight if limit is None else limit
+        overshoot = max(1, depth - bound + 1)
         cuts = -(-overshoot // self.config.max_batch_q) or 1  # ceil
         return cuts * max(window_s, self._ewma_batch_s)
 
@@ -384,7 +397,15 @@ class SimRankService:
                 raise AdmissionError(
                     self._retry_after_s(self._inflight), self._inflight
                 )
+            cap = self.config.tenant_max_inflight
+            mine = self._tenant_inflight.get(tenant, 0)
+            if cap is not None and mine >= cap:
+                # the tenant blew its own share while global slots remain:
+                # reject it without touching anyone else's admission
+                self.stats.rejected_429 += 1
+                raise AdmissionError(self._retry_after_s(mine, cap), mine)
             self._inflight += 1
+            self._tenant_inflight[tenant] = mine + 1
             self.stats.accepted += 1
             self._pending.append(item)
             self._cond.notify_all()
@@ -404,6 +425,11 @@ class SimRankService:
         item.payload = payload
         with self._cond:
             self._inflight -= 1
+            left = self._tenant_inflight.get(item.tenant, 0) - 1
+            if left > 0:
+                self._tenant_inflight[item.tenant] = left
+            else:
+                self._tenant_inflight.pop(item.tenant, None)
         item.event.set()
 
     # -- the collector -------------------------------------------------------
@@ -427,9 +453,7 @@ class SimRankService:
                     if rem <= 0:
                         break
                     self._cond.wait(timeout=rem)
-                batch = []
-                while self._pending and len(batch) < self.config.max_batch_q:
-                    batch.append(self._pending.popleft())
+                batch = self._cut_window()
             try:
                 self._serve_cut(batch)
             except BaseException as e:  # the collector must survive anything
@@ -440,6 +464,38 @@ class SimRankService:
                             it, 500,
                             {"error": f"{type(e).__name__}: {e}"},
                         )
+
+    def _cut_window(self) -> list[_PendingQuery]:
+        """Cut up to ``max_batch_q`` pending requests (under ``_cond``).
+
+        When everything pending fits one cut (the common case) this is
+        plain FIFO.  When the window OVERFLOWS a cut, deadline-bearing
+        queries take the lane slots first (earliest deadline wins) and
+        deadline-free ones keep FIFO order behind them — the extra window
+        of waiting lands on the queries that can afford it, instead of a
+        deadline query shedding (504) because FIFO queued it behind
+        best-effort traffic.  The un-cut remainder keeps arrival order.
+        """
+        q = self.config.max_batch_q
+        if len(self._pending) <= q:
+            batch = list(self._pending)
+            self._pending.clear()
+            return batch
+        items = list(self._pending)
+        order = sorted(
+            range(len(items)),
+            key=lambda i: (
+                (0, items[i].t_deadline)
+                if items[i].t_deadline is not None
+                else (1, items[i].t_enq)
+            ),
+        )
+        chosen = set(order[:q])
+        self._pending.clear()
+        self._pending.extend(
+            items[i] for i in range(len(items)) if i not in chosen
+        )
+        return [items[i] for i in order[:q]]
 
     @staticmethod
     def _group_key(spec: QuerySpec):
@@ -578,7 +634,9 @@ class SimRankService:
             service = self.stats.as_dict()
             service["inflight"] = self._inflight
             service["pending"] = len(self._pending)
+            service["tenant_inflight"] = dict(self._tenant_inflight)
         service["max_inflight"] = self.config.max_inflight
+        service["tenant_max_inflight"] = self.config.tenant_max_inflight
         service["batch_window_ms"] = self.config.batch_window_ms
         service["max_batch_q"] = self.config.max_batch_q
         with self._sessions_lock:

@@ -1,0 +1,339 @@
+"""Temporal stream subsystem (repro.streams, DESIGN.md §9): arrival
+generators, sliding-window expiry, the replay driver, and transports.
+
+The load-bearing invariant: a TTL window maintained through the
+coordinated update path (inserts append, expiry deletes oldest-first with
+stable compaction) keeps the COO+ELL mirrors **bit-identical** to
+rebuilding the live window from scratch in arrival order — across
+insert+expire interleaves, an overflow->regrow mid-stream, and the
+empty-window edge case.
+"""
+import numpy as np
+import pytest
+
+from repro.api.handle import GraphHandle
+from repro.api.session import SimRankSession
+from repro.graph import ell_from_edges, graph_from_edges
+from repro.streams import (
+    EventStream,
+    FreshnessSLO,
+    ServiceTransport,
+    SessionTransport,
+    SlidingWindowExpirer,
+    StreamDriver,
+    bursty_edge_stream,
+    poisson_edge_stream,
+    preferential_attachment_stream,
+)
+
+N = 40
+
+
+def _empty_session(n=N, *, capacity=512, k_max=32, **kw):
+    handle = GraphHandle.from_edges(
+        np.empty(0, np.int32), np.empty(0, np.int32), n,
+        capacity=capacity, k_max=k_max,
+    )
+    kw.setdefault("top_k", 8)
+    return SimRankSession(handle, **kw)
+
+
+def _assert_window_equals_rebuild(sess, expirer):
+    """The maintained mirrors vs a from-scratch rebuild of the live
+    window in arrival order — bitwise."""
+    h = sess.backend.handle
+    src, dst = expirer.live_edges()
+    g_rb = graph_from_edges(src, dst, h.n, capacity=h.g.capacity)
+    eg_rb = ell_from_edges(src, dst, h.n, k_max=h.eg.k_max)
+    np.testing.assert_array_equal(np.asarray(h.g.src), np.asarray(g_rb.src))
+    np.testing.assert_array_equal(np.asarray(h.g.dst), np.asarray(g_rb.dst))
+    np.testing.assert_array_equal(
+        np.asarray(h.g.in_deg), np.asarray(g_rb.in_deg))
+    np.testing.assert_array_equal(
+        np.asarray(h.g.out_deg), np.asarray(g_rb.out_deg))
+    np.testing.assert_array_equal(
+        np.asarray(h.eg.in_nbrs), np.asarray(eg_rb.in_nbrs))
+    np.testing.assert_array_equal(
+        np.asarray(h.eg.in_deg), np.asarray(eg_rb.in_deg))
+
+
+# -- generators --------------------------------------------------------------
+
+
+def test_poisson_stream_rate_and_invariants():
+    st = poisson_edge_stream(100, rate=2_000, horizon=1.0, seed=3)
+    assert len(st) > 0
+    # Poisson(2000): 5-sigma band around the mean
+    assert abs(len(st) - 2_000) < 5 * np.sqrt(2_000)
+    assert np.all(np.diff(st.t) >= 0)
+    assert st.t[0] > 0 and st.horizon <= 1.0
+    assert np.all(st.src != st.dst)  # self-loop-free
+    assert st.src.min() >= 0 and max(st.src.max(), st.dst.max()) < 100
+    st2 = poisson_edge_stream(100, rate=2_000, horizon=1.0, seed=3)
+    np.testing.assert_array_equal(st.t, st2.t)
+    np.testing.assert_array_equal(st.dst, st2.dst)
+
+
+def test_bursty_stream_is_clustered():
+    st = bursty_edge_stream(
+        100, rate_on=4_000, mean_on=0.05, mean_off=0.2, horizon=2.0, seed=5
+    )
+    assert len(st) > 0
+    assert np.all(np.diff(st.t) >= 0) and st.horizon <= 2.0
+    # on/off modulation: inter-arrival gaps are far burstier than the
+    # exponential (squared-CV 1) of a flat Poisson at the same mean rate
+    gaps = np.diff(st.t)
+    cv2 = gaps.var() / gaps.mean() ** 2
+    assert cv2 > 2.0
+
+
+def test_preferential_attachment_is_skewed():
+    pa = preferential_attachment_stream(200, 3_000, 1.0, seed=7)
+    po = poisson_edge_stream(200, 3_000, 1.0, seed=7)
+    deg_pa = np.bincount(pa.dst, minlength=200).max()
+    deg_po = np.bincount(po.dst, minlength=200).max()
+    assert np.all(pa.src != pa.dst)
+    assert deg_pa > 3 * deg_po  # rich got richer
+
+
+def test_event_stream_validation():
+    with pytest.raises(ValueError, match="nondecreasing"):
+        EventStream([1.0, 0.5], [0, 1], [1, 2], 10)
+    with pytest.raises(ValueError, match="ragged"):
+        EventStream([1.0], [0, 1], [1, 2], 10)
+    with pytest.raises(ValueError, match="out of range"):
+        EventStream([1.0], [0], [10], 10)
+    st = EventStream([0.1, 0.2, 0.3], [0, 1, 2], [1, 2, 3], 10)
+    cut = st.slice_time(0.1, 0.25)
+    assert len(cut) == 1 and int(cut.src[0]) == 1
+    assert [e.src for e in st.events()] == [0, 1, 2]
+
+
+# -- the sliding-window expirer ----------------------------------------------
+
+
+def test_expirer_fifo_cutoff_and_live_window():
+    ex = SlidingWindowExpirer(ttl=5.0)
+    t = np.arange(10, dtype=np.float64)  # arrivals at 0..9
+    src = np.arange(10, dtype=np.int32)
+    dst = (src + 1) % 10
+    ex.ingest(t, src, dst)
+    es, ed = ex.expire_until(7.0)  # cutoff 2.0: arrivals 0, 1, 2 expire
+    np.testing.assert_array_equal(es, [0, 1, 2])  # oldest first
+    np.testing.assert_array_equal(ed, [1, 2, 3])
+    assert ex.live == 7 and ex.oldest_t == 3.0 and ex.expired_total == 3
+    ls, _ = ex.live_edges()
+    np.testing.assert_array_equal(ls, np.arange(3, 10))
+    # repeated expiry at the same now is a no-op; going backwards raises
+    es, _ = ex.expire_until(7.0)
+    assert len(es) == 0
+    with pytest.raises(ValueError, match="nondecreasing"):
+        ex.expire_until(6.0)
+    with pytest.raises(ValueError, match="nondecreasing"):
+        ex.ingest([5.0], [0], [1])  # older than the last ingest (9.0)
+
+
+def test_expire_batches_apply_equals_rebuild():
+    """Expiry-derived UpdateBatches through the raw coordinated apply keep
+    the mirrors bitwise-equal to a rebuild of the live window."""
+    rng = np.random.default_rng(0)
+    n, m = 30, 60
+    src = rng.integers(0, n, m).astype(np.int32)
+    dst = (src + 1 + rng.integers(0, n - 1, m).astype(np.int32)) % n
+    t = np.sort(rng.uniform(0, 1, m))
+    handle = GraphHandle.from_edges(src, dst, n, capacity=128, k_max=32)
+    ex = SlidingWindowExpirer(ttl=0.4)
+    ex.ingest(t, src, dst)
+    batches = ex.expire_batches(1.0, batch_size=16, n=n)
+    assert len(batches) >= 2  # delete-heavy: more than one full batch
+    for b in batches:
+        assert bool(b.has_deletes) and not bool(np.asarray(b.insert).any())
+        applied = handle.apply_batch(b)
+        live = np.asarray(b.src) < n  # sentinel-padded tail
+        assert np.asarray(applied)[live].all()
+    ls, ld = ex.live_edges()
+    g_rb = graph_from_edges(ls, ld, n, capacity=handle.g.capacity)
+    np.testing.assert_array_equal(
+        np.asarray(handle.g.src), np.asarray(g_rb.src))
+    np.testing.assert_array_equal(
+        np.asarray(handle.g.dst), np.asarray(g_rb.dst))
+    assert handle.num_edges == ex.live
+
+
+# -- bitwise window == rebuild through the session update path ---------------
+
+
+def _tick_window(sess, ex, stream, lo, hi):
+    """Deliver arrivals in (lo, hi] and expire to hi, preserving global
+    stream order (arrivals before the expiry pass at the tick edge)."""
+    cut = stream.slice_time(lo, hi)
+    if len(cut):
+        ex.ingest(cut.t, cut.src, cut.dst)
+        sess.update(inserts=(cut.src, cut.dst))
+    es, ed = ex.expire_until(hi)
+    if len(es):
+        sess.update(deletes=(es, ed))
+
+
+def test_window_equals_rebuild_interleaved():
+    stream = poisson_edge_stream(N, rate=600, horizon=1.0, seed=11)
+    sess = _empty_session()
+    ex = SlidingWindowExpirer(ttl=0.3)
+    lo = 0.0
+    for hi in np.arange(0.1, 1.3, 0.1):
+        _tick_window(sess, ex, stream, lo, float(hi))
+        _assert_window_equals_rebuild(sess, ex)
+        lo = float(hi)
+    assert ex.expired_total > 0 and ex.live > 0
+    assert not sess.overflow
+
+
+def test_window_equals_rebuild_through_overflow_regrow():
+    """Mid-stream overflow: the window outgrows a tiny initial capacity,
+    auto_regrow doubles the buffers, and the bitwise invariant holds
+    across the regrow (rebuilds compare at the CURRENT capacity/k_max)."""
+    stream = poisson_edge_stream(N, rate=500, horizon=1.0, seed=13)
+    sess = _empty_session(capacity=16, k_max=4)
+    ex = SlidingWindowExpirer(ttl=0.5)
+    lo = 0.0
+    for hi in np.arange(0.1, 1.1, 0.1):
+        _tick_window(sess, ex, stream, lo, float(hi))
+        _assert_window_equals_rebuild(sess, ex)
+        lo = float(hi)
+    assert sess.stats.regrows > 0  # capacity really blew mid-stream
+    assert sess.backend.handle.g.capacity > 16
+    assert not sess.overflow  # regrow cleared the sticky flag
+    assert sess.backend.handle.num_edges == ex.live
+
+
+def test_window_equals_rebuild_empty_window():
+    """A silent gap longer than the TTL drains the window to empty
+    mid-stream; the emptied mirrors match an empty rebuild and keep the
+    invariant when traffic resumes."""
+    stream = poisson_edge_stream(N, rate=300, horizon=0.3, seed=17)
+    sess = _empty_session()
+    ex = SlidingWindowExpirer(ttl=0.1)
+    lo = 0.0
+    drained = False
+    for hi in np.arange(0.1, 0.9, 0.1):  # arrivals stop at 0.3
+        _tick_window(sess, ex, stream, lo, float(hi))
+        lo = float(hi)
+        _assert_window_equals_rebuild(sess, ex)
+        if hi > 0.4:
+            drained = True
+            assert ex.live == 0
+            assert sess.backend.handle.num_edges == 0
+    assert drained
+    # the emptied window still accepts traffic and keeps the invariant
+    ex.ingest([1.0], [1], [2])
+    sess.update(inserts=([1], [2]))
+    _assert_window_equals_rebuild(sess, ex)
+    assert sess.backend.handle.num_edges == 1
+
+
+# -- the replay driver -------------------------------------------------------
+
+
+def _drive(mode, **kw):
+    stream = poisson_edge_stream(N, rate=400, horizon=0.5, seed=19)
+    sess = _empty_session(batch_q=4)
+    drv = StreamDriver(
+        SessionTransport(sess, mode=mode), stream,
+        ttl=0.2, tick_s=0.1, queries_per_tick=2, update_burst=32,
+        k=5, budget_walks=64, slo=FreshnessSLO(staleness_p99_s=120.0),
+        **kw,
+    )
+    return stream, sess, drv
+
+
+@pytest.mark.parametrize("mode", ["drain", "epoch"])
+def test_driver_applies_every_op_and_serves(mode):
+    stream, sess, drv = _drive(mode)
+    rep = drv.run(final_expire=True)
+    # every arrival was ingested+applied and later expired+applied
+    assert rep.arrivals == len(stream)
+    assert rep.expired == len(stream)
+    assert rep.updates_applied == 2 * len(stream)
+    assert sess.backend.handle.num_edges == 0
+    assert rep.queries > 0 and rep.qps > 0
+    assert rep.staleness_p99_s >= rep.staleness_p50_s >= 0.0
+    assert rep.version_lag_p99 >= 0.0
+    assert rep.slo_met is True  # generous test SLO
+    assert rep.sticky_overflow is False
+    d = rep.as_dict()
+    assert d["slo"]["staleness_p99_s"] == 120.0
+    assert d["final_precision_at_k"] is None  # no checkpoints requested
+
+
+def test_driver_pooled_checkpoints():
+    stream, sess, drv = _drive("drain", checkpoint_every=3,
+                               checkpoint_queries=2, expert_r=400,
+                               fresh_budget=256)
+    rep = drv.run()
+    assert len(rep.checkpoints) >= 1
+    cp = rep.checkpoints[-1]
+    assert 0.0 <= cp.precision_at_k <= 1.0
+    assert 0.0 <= cp.ndcg_at_k <= 1.0 + 1e-9
+    assert cp.pool_size >= drv.k  # the scout really joined the pool
+    assert cp.live_edges > 0
+    assert rep.final_precision_at_k == cp.precision_at_k
+
+
+def test_driver_sharded_backend_smoke():
+    stream = poisson_edge_stream(N, rate=200, horizon=0.3, seed=23)
+    handle = GraphHandle.from_edges(
+        np.empty(0, np.int32), np.empty(0, np.int32), N,
+        capacity=256, k_max=16,
+    )
+    sess = SimRankSession(handle, backend="sharded", top_k=5, batch_q=2)
+    drv = StreamDriver(
+        SessionTransport(sess, mode="drain"), stream,
+        ttl=0.15, tick_s=0.1, queries_per_tick=1, update_burst=32,
+        k=5, budget_walks=64,
+    )
+    rep = drv.run()
+    assert rep.arrivals == len(stream)
+    assert rep.updates_applied >= rep.arrivals  # inserts + some expiry
+    assert rep.queries > 0
+    assert rep.slo_met is None  # no SLO configured
+
+
+def test_driver_service_transport():
+    from repro.serving import ServiceConfig, SimRankService
+
+    handle = GraphHandle.from_edges(
+        np.empty(0, np.int32), np.empty(0, np.int32), N,
+        capacity=512, k_max=32,
+    )
+    stream = poisson_edge_stream(N, rate=400, horizon=0.4, seed=29)
+    with SimRankService(
+        handle,
+        config=ServiceConfig(batch_window_ms=2.0, max_batch_q=4,
+                             default_budget_walks=64),
+    ) as svc:
+        tr = ServiceTransport(svc, tenant="stream")
+        drv = StreamDriver(
+            tr, stream, ttl=0.2, tick_s=0.1, queries_per_tick=2,
+            update_burst=32, k=5, budget_walks=64,
+        )
+        rep = drv.run()
+        assert rep.queries > 0
+        assert svc.stats.served >= rep.queries
+        assert svc.stats.updates_applied == rep.updates_applied
+        assert svc.stats.errors_5xx == 0
+    assert rep.arrivals == len(stream)
+
+
+def test_driver_validates_inputs():
+    stream = poisson_edge_stream(N, rate=100, horizon=0.2, seed=1)
+    sess = _empty_session()
+    tr = SessionTransport(sess)
+    with pytest.raises(ValueError, match="tick_s"):
+        StreamDriver(tr, stream, ttl=0.1, tick_s=0.0)
+    with pytest.raises(ValueError, match="mode"):
+        SessionTransport(sess, mode="warp")
+    other = poisson_edge_stream(N + 1, rate=100, horizon=0.2, seed=1)
+    with pytest.raises(ValueError, match="n="):
+        StreamDriver(tr, other, ttl=0.1, tick_s=0.1)
+    with pytest.raises(ValueError, match="ttl"):
+        SlidingWindowExpirer(ttl=0.0)

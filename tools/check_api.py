@@ -25,6 +25,7 @@ MODULES = [
     "repro.core",
     "repro.graph",
     "repro.serving",
+    "repro.streams",
 ]
 
 MANIFEST = os.path.join(
