@@ -7,8 +7,9 @@ for the serial vs fused-batched drain) when the serve suite runs,
 update->queryable latency) when the dynamic suite runs, and
 ``BENCH_abserror.json`` (the adaptive-controller epsilon sweep: walks used,
 oracle max-abs-error vs certified bound, precision@10, walks saved vs the
-flat budget) when the abserror suite runs — each also carrying every
-emitted row.  ``--full`` runs paper-scale sweeps; default (``--quick``) is
+flat budget) when the abserror suite runs, and ``BENCH_kernels.json`` (the
+fused lane-probe kernel vs the XLA lane-level oracle with roofline records)
+when the kernels suite runs — each also carrying every emitted row.  ``--full`` runs paper-scale sweeps; default (``--quick``) is
 the CPU-quick profile.
 """
 from __future__ import annotations
@@ -67,7 +68,8 @@ def main() -> None:
     # suites that must fill RESULTS[name]; abserror is structured too — it
     # used to print CSV rows and silently drop its metrics, so the
     # accuracy-gate job had nothing machine-readable to enforce
-    structured = {"serve", "dynamic", "abserror", "service", "stream"}
+    structured = {"serve", "dynamic", "abserror", "service", "stream",
+                  "kernels"}
     chosen = args.only.split(",") if args.only else list(suites)
     unknown = [name for name in chosen if name not in suites]
     if unknown:
@@ -109,6 +111,8 @@ def main() -> None:
             write_json("BENCH_abserror.json", quick=quick, suites=chosen)
         if "stream" in chosen:
             write_json("BENCH_stream.json", quick=quick, suites=chosen)
+        if "kernels" in chosen:
+            write_json("BENCH_kernels.json", quick=quick, suites=chosen)
 
 
 if __name__ == "__main__":

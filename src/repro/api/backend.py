@@ -197,13 +197,20 @@ class LocalBackend:
         params: ProbeSimParams,
         walk_chunk: int = 256,
         use_kernel: bool = False,
+        kernel_dtype: str = "float32",
     ):
         if not isinstance(handle, GraphHandle):
             raise TypeError("LocalBackend takes a GraphHandle")
+        if kernel_dtype not in ("float32", "bfloat16"):
+            raise ValueError(
+                f"kernel_dtype must be 'float32' or 'bfloat16', "
+                f"got {kernel_dtype!r}"
+            )
         self.handle = handle
         self.params = params
         self.walk_chunk = walk_chunk
         self.use_kernel = use_kernel
+        self.kernel_dtype = kernel_dtype
         self._hubs: tuple | None = None  # ((version, percentile), frozenset)
 
     # -- snapshot state ------------------------------------------------------
@@ -282,7 +289,7 @@ class LocalBackend:
         us = jnp.asarray(us, jnp.int32)
         common = dict(
             lanes=self.walk_chunk, n_r=n_r, keys=keys,
-            use_kernel=self.use_kernel,
+            use_kernel=self.use_kernel, kernel_dtype=self.kernel_dtype,
         )
         if kind == "topk":
             idx, vals = multi_source_topk(
@@ -731,14 +738,14 @@ class ShardedBackend:
         edge_chunks: int = 4,
         capacity_per_shard: int | None = None,
         use_kernel: bool = False,
+        frontier_dtype: str = "float32",
     ):
         if probe not in ("spmd", "ring"):
             raise ValueError(f"probe must be 'spmd' or 'ring', got {probe!r}")
-        if use_kernel:
-            # refuse rather than silently serve the non-kernel mesh probe
+        if frontier_dtype not in ("float32", "bfloat16"):
             raise ValueError(
-                "the sharded backend has no Pallas-kernel probe path; "
-                "use_kernel=True is only available on the local backend"
+                f"frontier_dtype must be 'float32' or 'bfloat16', "
+                f"got {frontier_dtype!r}"
             )
         if isinstance(state, GraphHandle):
             state = state.shard(
@@ -754,6 +761,8 @@ class ShardedBackend:
         self.walk_chunk = int(walk_chunk)
         self.probe = probe
         self.edge_chunks = int(edge_chunks)
+        self.use_kernel = bool(use_kernel)
+        self.frontier_dtype = frontier_dtype
         if mesh is None:
             ndev = len(jax.devices())
             s = state.shards
@@ -920,9 +929,10 @@ class ShardedBackend:
         """
         st = self._epoch_graph_state()
         q = 0 if us is None else len(us)
+        uk = self.use_kernel if use_kernel is None else bool(use_kernel)
         cfg = (
             q, n_r if q else 0, top_k if q else 0,
-            bool(batch.has_deletes), st.capacity, st.k_max,
+            bool(batch.has_deletes), st.capacity, st.k_max, uk,
         )
         step = self._epoch_steps.get(cfg)
         if step is None:
@@ -934,6 +944,7 @@ class ShardedBackend:
                 eps_t=p.eps_t, truncation_shift=p.truncation_shift,
                 walk_chunk=self.walk_chunk, edge_chunks=self.edge_chunks,
                 has_deletes=bool(batch.has_deletes),
+                use_kernel=uk,
             )
             self._epoch_steps[cfg] = step
         # host copies of the op stream BEFORE the dispatch (the replay
@@ -1005,6 +1016,7 @@ class ShardedBackend:
         cfg = (
             q, int(k), int(n_r), wq, self.probe,
             st.capacity, st.k_max, ring_band,
+            self.use_kernel, self.frontier_dtype,
         )
         step = self._steps.get(cfg)
         if step is None:
@@ -1015,6 +1027,8 @@ class ShardedBackend:
                 max_len=p.max_len, sqrt_c=p.sqrt_c, eps_p=p.eps_p,
                 eps_t=p.eps_t, truncation_shift=p.truncation_shift,
                 probe=self.probe,
+                use_kernel=self.use_kernel,
+                frontier_dtype=self.frontier_dtype,
             )
             self._steps[cfg] = step
         with set_mesh(self.mesh):

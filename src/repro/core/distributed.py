@@ -236,12 +236,36 @@ def probe_walks_sharded(
 # ---------------------------------------------------------------------------
 
 
+def lane_level_xla(push_block, *, row0, rows, w, eps_p: float):
+    """Build the XLA level function for one shard's [rows, W] block.
+
+    The level is the same deposit + inject + prune + push + exclude
+    sequence the local serve runs, with injection/exclusion as row-iota
+    compares (elementwise — no cross-shard scatters).  ``push_block``
+    performs one renormalized push level over the full graph for this row
+    block (all-gather or ring exchange — the caller owns the collective
+    pattern).
+    """
+    rid = jax.lax.broadcasted_iota(jnp.int32, (rows, w), 0) + row0
+
+    def level_fn(scores, total, fin, u_p, u_prev, thr):
+        total = total + jnp.where(fin[None, :], scores, 0.0)
+        scores = jnp.where(fin[None, :], 0.0, scores)
+        scores = scores + (rid == u_p[None, :]).astype(jnp.float32)
+        if eps_p > 0.0:
+            scores = jnp.where(scores > thr[None, :], scores, 0.0)
+        scores = push_block(scores)
+        scores = jnp.where(rid == u_prev[None, :], 0.0, scores)
+        return scores, total
+
+    return level_fn
+
+
 def lane_probe_block(
-    push_block,
+    level_fn,
     pool: Array,  # int32 [Q*n_r, L] replicated walk pool (sentinel >= n)
     pool_len: Array,  # int32 [Q*n_r] replicated
     *,
-    row0,  # traced int32: first global row of this shard's block
     rows: int,
     q: int,
     wq: int,
@@ -254,31 +278,32 @@ def lane_probe_block(
     """Compacted lane probe over ONE row block; returns ``total`` [rows, W].
 
     The distributed counterpart of ``fused_serve_impl``'s loop: the same
-    shared lane-compaction bookkeeping (``core.multisource``), but the score
-    buffer is this shard's [rows, W] block and injection/exclusion are
-    row-iota compares (elementwise — no cross-shard scatters).  The
-    bookkeeping operands (``pool_len``, cursors, positions) are replicated,
-    so every shard takes the identical trip count and the collectives inside
-    ``push_block`` line up across the mesh.
+    shared lane-compaction bookkeeping (``core.multisource``) drives a
+    caller-supplied level function.  The bookkeeping operands
+    (``pool_len``, cursors, positions) are replicated, so every shard takes
+    the identical trip count and the collectives inside ``level_fn`` line
+    up across the mesh.
 
-    ``push_block(scores) -> scores`` performs one renormalized push level
-    over the full graph for this row block (all-gather or ring exchange —
-    the caller owns the collective pattern).  ``sentinel`` is the pool's
-    walk-end marker; the compare against ``rid`` either hits a padding row
-    (whose pushed mass is sliced away by the caller's ``[:n]``) or nothing.
+    ``level_fn(scores, total, fin, u_p, u_prev, thr) -> (scores, total)``
+    executes one full probe level — deposit of finishing columns, unit
+    injection at ``u_p``, pruning at ``thr``, the renormalized push, and
+    the ``u_prev`` exclusion — either as the XLA composition
+    (``lane_level_xla``) or fused on-chip (``kernels/lane_probe``).
+    ``sentinel`` is the pool's walk-end marker; sentinel ids either hit a
+    padding row (whose pushed mass is sliced away by the caller's ``[:n]``)
+    or nothing.
     """
     from repro.core.multisource import (
         lane_columns,
         lane_continue,
-        lane_deposit_refill,
         lane_frontier,
         lane_max_steps,
+        lane_refill,
         lane_thresholds,
     )
 
     w = q * wq
     _, qid = lane_columns(q, wq)
-    rid = jax.lax.broadcasted_iota(jnp.int32, (rows, w), 0) + row0
     max_steps = lane_max_steps(n_r, max_len)
 
     def cond(state):
@@ -287,17 +312,12 @@ def lane_probe_block(
 
     def body(state):
         step, pos, widx, next_q, scores, total = state
-        pos, widx, next_q, scores, total = lane_deposit_refill(
-            pos, widx, next_q, scores, total, pool_len, qid,
-            q=q, wq=wq, n_r=n_r,
+        fin, pos, widx, next_q = lane_refill(
+            pos, widx, next_q, pool_len, qid, q=q, wq=wq, n_r=n_r
         )
         active, u_p, u_prev = lane_frontier(pool, widx, pos, sentinel)
-        scores = scores + (rid == u_p[None, :]).astype(jnp.float32)
-        if eps_p > 0.0:
-            thr = lane_thresholds(pos, sqrt_c=sqrt_c, eps_p=eps_p)
-            scores = jnp.where(scores > thr[None, :], scores, 0.0)
-        scores = push_block(scores)
-        scores = jnp.where(rid == u_prev[None, :], 0.0, scores)
+        thr = lane_thresholds(pos, sqrt_c=sqrt_c, eps_p=eps_p)
+        scores, total = level_fn(scores, total, fin, u_p, u_prev, thr)
         pos = jnp.where(active, pos - 1, pos)
         return step + 1, pos, widx, next_q, scores, total
 
@@ -333,6 +353,9 @@ def probe_lanes_sharded(
     eps_p: float,
     sentinel: int,
     edge_chunk: int = 2048,
+    use_kernel: bool = False,
+    in_nbrs: Array | None = None,
+    frontier_dtype: str = "float32",
 ) -> Array:
     """Lane-batched telescoped probe, all-gather push; returns [n_pad, W].
 
@@ -353,6 +376,17 @@ def probe_lanes_sharded(
     edges simply finish their level sooner.  Sentinel slots inside the last
     live chunk gather a garbage row but scatter into the dropped segment
     ``rows`` (their dst is the sentinel), so no zero-row append is needed.
+
+    ``use_kernel=True`` replaces the COO chunk loop with the fused Pallas
+    lane-probe level (``kernels/lane_probe``) gathering from the all-gathered
+    frontier through the row-sharded ELL table ``in_nbrs`` ([n_pad, k_max],
+    sentinel ``sentinel``) — deposit/inject/prune/push/exclude in one pass
+    per level.  ``frontier_dtype="bfloat16"`` halves the per-level
+    all_gather wire volume (the dominant collective, ROADMAP): the frontier
+    is rounded to bf16 and bitcast to uint16 for the exchange (the same
+    wire trick as ``core/ring.py``), then widened back — accumulation,
+    deposits and the carried block stay fp32, and the single-shard
+    degenerate path skips the exchange (and the rounding) entirely.
     """
     from repro.utils.jaxcompat import shard_map
 
@@ -382,60 +416,100 @@ def probe_lanes_sharded(
         src_sh = jnp.concatenate([src_sh, fill], axis=1)
         dst_sh = jnp.concatenate([dst_sh, fill], axis=1)
 
-    def local(src_b, dst_b, cnt_b, w_l, pool_l, plen_l):
+    wire_bf16 = frontier_dtype == "bfloat16"
+
+    def _exchange(scores):
+        """Per-level frontier all_gather, optionally on a bf16 wire."""
+        if rows == n_pad:
+            # one model shard owns every row: the local block IS the full
+            # frontier, and the degenerate all_gather is a pure [n_pad, W]
+            # copy per level — skip it (no bf16 rounding either: the wire
+            # format only exists where there is a wire)
+            return scores
+        if wire_bf16:
+            bits = jax.lax.bitcast_convert_type(
+                scores.astype(jnp.bfloat16), jnp.uint16
+            )
+            bits = jax.lax.all_gather(bits, "model", axis=0, tiled=True)
+            return jax.lax.bitcast_convert_type(
+                bits, jnp.bfloat16
+            ).astype(jnp.float32)
+        return jax.lax.all_gather(scores, "model", axis=0, tiled=True)
+
+    def local(src_b, dst_b, cnt_b, w_l, pool_l, plen_l, ell_l=None):
         # src_b/dst_b [1, e_pad]; cnt_b [1]; w_l [rows]; pool replicated
         me = jax.lax.axis_index("model")
         row0 = me * rows
-        # clip into the real row range: sentinel srcs read a garbage row
-        # whose message lands in the dropped segment (sentinel dst)
-        sb = src_b[0].clip(0, n_pad - 1)
-        db = (dst_b[0] - row0).clip(0, rows)  # sentinel -> dropped segment
-        n_chunks = (cnt_b[0] + ch - 1) // ch
 
-        def push_block(scores):
-            if rows == n_pad:
-                # one model shard owns every row: the local block IS the
-                # full frontier, and the degenerate all_gather is a pure
-                # [n_pad, W] copy per level — skip it
-                full = scores
-            else:
-                full = jax.lax.all_gather(
-                    scores, "model", axis=0, tiled=True
-                )  # [n_pad, W]
+        if use_kernel:
+            from repro.kernels.lane_probe.ops import lane_probe_level
 
-            def chunk(i, acc):
-                s_c = jax.lax.dynamic_slice(sb, (i * ch,), (ch,))
-                d_c = jax.lax.dynamic_slice(db, (i * ch,), (ch,))
-                return acc + jax.ops.segment_sum(
-                    full[s_c], d_c, num_segments=rows + 1
+            def level_fn(scores, total, fin, u_p, u_prev, thr):
+                # deposit reads the exact local block; only the gathered
+                # frontier rides the (possibly bf16) wire
+                full = _exchange(scores)
+                return lane_probe_level(
+                    ell_l, w_l, full, scores, total,
+                    fin, u_p, u_prev, thr,
+                    row0=row0, tab0=row0, n_live=sentinel,
+                    prune=eps_p > 0.0,
                 )
+        else:
+            # clip into the real row range: sentinel srcs read a garbage
+            # row whose message lands in the dropped segment (sentinel dst)
+            sb = src_b[0].clip(0, n_pad - 1)
+            db = (dst_b[0] - row0).clip(0, rows)
+            n_chunks = (cnt_b[0] + ch - 1) // ch
 
-            acc = jax.lax.fori_loop(
-                0, n_chunks, chunk,
-                jnp.zeros((rows + 1, scores.shape[1]), jnp.float32),
-            )[:rows]
-            return acc * w_l[:, None]
+            def push_block(scores):
+                full = _exchange(scores)
+
+                def chunk(i, acc):
+                    s_c = jax.lax.dynamic_slice(sb, (i * ch,), (ch,))
+                    d_c = jax.lax.dynamic_slice(db, (i * ch,), (ch,))
+                    return acc + jax.ops.segment_sum(
+                        full[s_c], d_c, num_segments=rows + 1
+                    )
+
+                acc = jax.lax.fori_loop(
+                    0, n_chunks, chunk,
+                    jnp.zeros((rows + 1, scores.shape[1]), jnp.float32),
+                )[:rows]
+                return acc * w_l[:, None]
+
+            level_fn = lane_level_xla(
+                push_block, row0=row0, rows=rows, w=q * wq, eps_p=eps_p
+            )
 
         return lane_probe_block(
-            push_block, pool_l, plen_l,
-            row0=row0, rows=rows, q=q, wq=wq, n_r=n_r,
+            level_fn, pool_l, plen_l,
+            rows=rows, q=q, wq=wq, n_r=n_r,
             max_len=max_len, sqrt_c=sqrt_c, eps_p=eps_p, sentinel=sentinel,
         )
+
+    in_specs = [
+        P("model", None), P("model", None), P("model"), P("model"),
+        P(), P(),
+    ]
+    args = [src_sh, dst_sh, counts, w_full, pool, pool_len]
+    if use_kernel:
+        if in_nbrs is None:
+            raise ValueError("use_kernel=True needs the row-sharded ELL "
+                             "table (in_nbrs)")
+        in_specs.append(P("model", None))
+        args.append(in_nbrs)
 
     fn = shard_map(
         local,
         mesh=mesh,
-        in_specs=(
-            P("model", None), P("model", None), P("model"), P("model"),
-            P(), P(),
-        ),
+        in_specs=tuple(in_specs),
         out_specs=P("model", None),
         # fully manual (same reason as the epoch apply step: leftover auto
         # axes lower axis_index to a PartitionId old-jax rejects); inputs
         # and compute replicate over the data axes
         axis_names=set(mesh.axis_names),
     )
-    return fn(src_sh, dst_sh, counts, w_full, pool, pool_len)
+    return fn(*args)
 
 
 def _row_pad(sg: ShardedGraph) -> int:

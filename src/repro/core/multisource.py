@@ -51,7 +51,7 @@ import jax.numpy as jnp
 
 from repro.core.params import ProbeSimParams
 from repro.core.probe import push_level_padded
-from repro.core.walks import sample_walks_batch
+from repro.core.walks import walk_uniforms, walks_from_uniforms
 from repro.graph.structs import EllGraph, Graph
 
 Array = jax.Array
@@ -87,24 +87,20 @@ def lane_continue(step, pos, next_q, *, n_r: int, max_steps: int):
     return (step < max_steps) & (jnp.any(pos >= 1) | jnp.any(next_q < n_r))
 
 
-def lane_deposit_refill(
-    pos, widx, next_q, scores, total, pool_len, qid, *, q, wq, n_r
-):
-    """Deposit finished columns into ``total`` and refill idle columns.
+def lane_refill(pos, widx, next_q, pool_len, qid, *, q, wq, n_r):
+    """Column bookkeeping for one level: finished-column detection plus
+    sticky per-query refill from the pool.
 
-    ``scores``/``total`` are [rows, W] blocks (any row count — the helpers
-    only touch them columnwise); ``pos``/``widx`` are per-column int32 [W],
-    ``next_q`` the per-query pool cursor [Q].  Refill pulls walks from each
-    query's pool partition in pool order — selection is content-independent,
-    so the estimator stays unbiased.  Returns the updated state tuple.
+    Pure [W]-vector arithmetic — no score movement — so the fused Pallas
+    level kernel and the XLA level composition share it verbatim.  Returns
+    ``(fin, pos, widx, next_q)``; ``fin`` marks the columns whose walk just
+    finished (the caller deposits their scores into ``total``).  Refill
+    pulls walks from each query's pool partition in pool order — selection
+    is content-independent, so the estimator stays unbiased.
     """
     w = q * wq
-    # 1) deposit finished columns (idle columns hold zeros anyway)
     fin = pos == 1
-    total = total + jnp.where(fin[None, :], scores, 0.0)
-    scores = jnp.where(fin[None, :], 0.0, scores)
     pos = jnp.where(fin, 0, pos)
-    # 2) refill idle columns from their query's pool partition
     idle = (pos == 0).astype(jnp.int32).reshape(q, wq)
     rank = (jnp.cumsum(idle, axis=1) - idle).reshape(w)
     take = (pos == 0) & (rank < (n_r - next_q)[qid])
@@ -112,6 +108,26 @@ def lane_deposit_refill(
     widx = jnp.where(take, new_widx, widx)
     pos = jnp.where(take, pool_len[new_widx], pos)
     next_q = next_q + take.astype(jnp.int32).reshape(q, wq).sum(axis=1)
+    return fin, pos, widx, next_q
+
+
+def lane_deposit_refill(
+    pos, widx, next_q, scores, total, pool_len, qid, *, q, wq, n_r
+):
+    """Deposit finished columns into ``total`` and refill idle columns.
+
+    ``scores``/``total`` are [rows, W] blocks (any row count — the helpers
+    only touch them columnwise); ``pos``/``widx`` are per-column int32 [W],
+    ``next_q`` the per-query pool cursor [Q].  Composition of
+    ``lane_refill`` with the columnwise score movement; kept for callers
+    that fuse the deposit into their own level (the Pallas kernel path
+    calls ``lane_refill`` directly and deposits on-chip).
+    """
+    fin, pos, widx, next_q = lane_refill(
+        pos, widx, next_q, pool_len, qid, q=q, wq=wq, n_r=n_r
+    )
+    total = total + jnp.where(fin[None, :], scores, 0.0)
+    scores = jnp.where(fin[None, :], 0.0, scores)
     return pos, widx, next_q, scores, total
 
 
@@ -150,23 +166,72 @@ def fused_serve_impl(
     truncation_shift: bool,
     use_kernel: bool,
     top_k: int,
+    kernel_dtype: str = "float32",
 ):
     """One fused serve step: sample pool -> compacted probe -> estimates.
 
-    Returns ``(acc, est, topk_idx, topk_vals)``; the top-k outputs are None
-    when ``top_k == 0``.
+    ``use_kernel=True`` runs each probe level through the fused Pallas
+    lane-probe kernel (``kernels/lane_probe``) against the ELL push table;
+    ``kernel_dtype="bfloat16"`` additionally stores the score/accumulator
+    buffers in bf16 (accumulation stays fp32 on-chip).  Returns
+    ``(acc, est, topk_idx, topk_vals)``; the top-k outputs are None when
+    ``top_k == 0``.
     """
     n = eg.n
     q = us.shape[0]
     wq = lanes_q
     w = q * wq
     cols, qid = lane_columns(q, wq)
+    dtype = (
+        jnp.bfloat16
+        if (use_kernel and kernel_dtype == "bfloat16")
+        else jnp.float32
+    )
 
-    # --- walk pool: every walk for every query, one vmapped dispatch -------
-    pool = sample_walks_batch(
-        keys, eg, us, n_r=n_r, max_len=max_len, sqrt_c=sqrt_c
-    ).reshape(q * n_r, max_len)
-    pool_len = (pool < n).sum(axis=1).astype(jnp.int32)
+    # --- walk pool, pipelined against the first push level ----------------
+    # All per-(walk, step) uniforms are drawn up front (bit-identical to a
+    # single pooled sample_walks_batch call); only the first wq walks per
+    # query — the ones the first refill can possibly claim — are
+    # materialized before level 1.  The remaining (n_r - wq) walks'
+    # ELL-table scans carry no data dependency on the level loop, so they
+    # overlap the first push level instead of serializing ahead of it
+    # (~20% of the step, ROADMAP).
+    h = min(wq, n_r)
+    cont, pick = jax.vmap(
+        lambda k: walk_uniforms(k, n_r=n_r, max_len=max_len, sqrt_c=sqrt_c)
+    )(keys)
+    walks_of = jax.vmap(lambda u1, c, p: walks_from_uniforms(eg, u1, c, p))
+    head = walks_of(us, cont[:, :h], pick[:, :h])  # [Q, h, max_len]
+
+    # --- one probe level: deposit + inject + prune + push + exclude -------
+    if use_kernel:
+        from repro.kernels.lane_probe.ops import lane_probe_level
+
+        ell = g if isinstance(g, EllGraph) else eg
+        w_push = ell.inv_in_deg * sqrt_c
+        zrow = jnp.zeros((1, w), dtype)
+
+        def level_fn(scores, total, fin, u_p, u_prev, thr):
+            out, tot = lane_probe_level(
+                ell.in_nbrs, w_push, scores, scores[:n], total[:n],
+                fin, u_p, u_prev, thr,
+                row0=0, tab0=0, n_live=n, prune=eps_p > 0.0,
+            )
+            return (
+                jnp.concatenate([out, zrow]),
+                jnp.concatenate([tot, zrow]),
+            )
+    else:
+
+        def level_fn(scores, total, fin, u_p, u_prev, thr):
+            total = total + jnp.where(fin[None, :], scores, 0.0)
+            scores = jnp.where(fin[None, :], 0.0, scores)
+            scores = scores.at[u_p, cols].add(1.0)  # sentinel -> dump row
+            if eps_p > 0.0:
+                scores = jnp.where(scores > thr[None, :], scores, 0.0)
+            scores = push_level_padded(g, scores, sqrt_c, use_kernel=False)
+            scores = scores.at[u_prev, cols].set(0.0)  # exclusion mask
+            return scores, total
 
     # --- compacted probe loop ---------------------------------------------
     # Per-column state: pos (current walk position; 1/0 = finished/idle),
@@ -179,20 +244,15 @@ def fused_serve_impl(
         step, pos, widx, next_q, scores, total = state
         return lane_continue(step, pos, next_q, n_r=n_r, max_steps=max_steps)
 
-    def body(state):
+    def body(state, pool, pool_len):
         step, pos, widx, next_q, scores, total = state
-        pos, widx, next_q, scores, total = lane_deposit_refill(
-            pos, widx, next_q, scores, total, pool_len, qid,
-            q=q, wq=wq, n_r=n_r,
+        fin, pos, widx, next_q = lane_refill(
+            pos, widx, next_q, pool_len, qid, q=q, wq=wq, n_r=n_r
         )
         # one telescoped level per active column, at its own position
         active, u_p, u_prev = lane_frontier(pool, widx, pos, n)
-        scores = scores.at[u_p, cols].add(1.0)  # sentinel -> dump row
-        if eps_p > 0.0:
-            thr = lane_thresholds(pos, sqrt_c=sqrt_c, eps_p=eps_p)
-            scores = jnp.where(scores > thr[None, :], scores, 0.0)
-        scores = push_level_padded(g, scores, sqrt_c, use_kernel=use_kernel)
-        scores = scores.at[u_prev, cols].set(0.0)  # exclusion mask
+        thr = lane_thresholds(pos, sqrt_c=sqrt_c, eps_p=eps_p)
+        scores, total = level_fn(scores, total, fin, u_p, u_prev, thr)
         pos = jnp.where(active, pos - 1, pos)
         return step + 1, pos, widx, next_q, scores, total
 
@@ -201,15 +261,35 @@ def fused_serve_impl(
         jnp.zeros(w, jnp.int32),  # pos: all idle -> first iteration refills
         jnp.zeros(w, jnp.int32),  # widx
         jnp.zeros(q, jnp.int32),  # next_q
-        jnp.zeros((n + 1, w), jnp.float32),  # scores (baked dump row)
-        jnp.zeros((n + 1, w), jnp.float32),  # total (baked dump row)
+        jnp.zeros((n + 1, w), dtype),  # scores (baked dump row)
+        jnp.zeros((n + 1, w), dtype),  # total (baked dump row)
     )
-    step, pos, _, _, scores, total = jax.lax.while_loop(cond, body, state)
+    # First level runs against the head-only pool (the first refill can only
+    # claim head walks, so this is bit-identical to the full-pool level);
+    # the tail walks materialize concurrently with it.
+    if h < n_r:
+        head_pool = jnp.concatenate(
+            [head, jnp.full((q, n_r - h, max_len), n, jnp.int32)], axis=1
+        ).reshape(q * n_r, max_len)
+        head_len = (head_pool < n).sum(axis=1).astype(jnp.int32)
+        state = body(state, head_pool, head_len)
+        tail = walks_of(us, cont[:, h:], pick[:, h:])
+        pool = jnp.concatenate([head, tail], axis=1).reshape(
+            q * n_r, max_len
+        )
+        pool_len = (pool < n).sum(axis=1).astype(jnp.int32)
+    else:
+        pool = head.reshape(q * n_r, max_len)
+        pool_len = (pool < n).sum(axis=1).astype(jnp.int32)
+        state = body(state, pool, pool_len)
+    step, pos, _, _, scores, total = jax.lax.while_loop(
+        cond, lambda s: body(s, pool, pool_len), state
+    )
     # safety-net flush (no-op unless max_steps was hit)
     total = total + jnp.where((pos == 1)[None, :], scores, 0.0)
 
     # --- per-query segment reduction + epilogue ---------------------------
-    acc = acc + total[:n].reshape(n, q, wq).sum(axis=2).T
+    acc = acc + total[:n].astype(jnp.float32).reshape(n, q, wq).sum(axis=2).T
     est = acc / n_r
     if truncation_shift:
         est = jnp.where(est > 0, est + eps_t / 2, est)
@@ -238,6 +318,7 @@ _fused_serve = partial(
         "truncation_shift",
         "use_kernel",
         "top_k",
+        "kernel_dtype",
     ),
     donate_argnames=("acc",),
 )(fused_serve_impl)
@@ -260,6 +341,7 @@ def multi_source(
     *,
     lanes: int = 256,
     use_kernel: bool = False,
+    kernel_dtype: str = "float32",
     n_r: int | None = None,
     keys: Array | None = None,
 ) -> Array:
@@ -268,9 +350,12 @@ def multi_source(
     ``us`` is int32 [Q]; ``g`` is the push representation (COO or ELL), ``eg``
     the ELL table used for walk sampling.  ``lanes`` is the total lane-column
     width shared by the batch (each query owns ``lanes // Q`` columns).
-    ``n_r`` overrides ``params.n_r`` (anytime/budgeted serving).  Pass
-    per-query ``keys`` ([Q] typed key array) for batch-vs-serial determinism;
-    otherwise ``key`` is split into Q streams.
+    ``use_kernel=True`` serves every probe level through the fused Pallas
+    lane-probe kernel (bitwise-equal to the XLA ELL path in fp32);
+    ``kernel_dtype="bfloat16"`` stores the lane buffers bf16 with fp32
+    accumulation.  ``n_r`` overrides ``params.n_r`` (anytime/budgeted
+    serving).  Pass per-query ``keys`` ([Q] typed key array) for
+    batch-vs-serial determinism; otherwise ``key`` is split into Q streams.
     """
     us = jnp.asarray(us, jnp.int32)
     q = int(us.shape[0])
@@ -287,6 +372,7 @@ def multi_source(
         truncation_shift=params.truncation_shift,
         use_kernel=use_kernel,
         top_k=0,
+        kernel_dtype=kernel_dtype,
     )
     return est
 
@@ -301,6 +387,7 @@ def multi_source_topk(
     *,
     lanes: int = 256,
     use_kernel: bool = False,
+    kernel_dtype: str = "float32",
     n_r: int | None = None,
     keys: Array | None = None,
 ) -> tuple[Array, Array]:
@@ -324,5 +411,6 @@ def multi_source_topk(
         truncation_shift=params.truncation_shift,
         use_kernel=use_kernel,
         top_k=int(k),
+        kernel_dtype=kernel_dtype,
     )
     return idx, vals

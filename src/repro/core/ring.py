@@ -243,6 +243,7 @@ def probe_lanes_ring(
     sqrt_c: float,
     eps_p: float,
     sentinel: int,
+    use_kernel: bool = False,
 ) -> Array:
     """Lane-batched telescoped probe with the ring push; returns [n_pad, W].
 
@@ -253,8 +254,16 @@ def probe_lanes_ring(
     Lane columns replicate over the data axes — the batched program has no
     per-chunk column sharding, so ring serving composes with ANY (Q, n_r)
     instead of falling back on divisibility remainders.
+
+    ``use_kernel=True`` fuses the level prologue (deposit + inject + prune)
+    through the Pallas lane-probe kernel in its identity-gather form — the
+    push itself must stay the ring exchange (the kernel cannot gather
+    through a ppermute), so the renormalize + exclusion epilogue follows it
+    as before.  Bitwise-equal to the XLA ring level in fp32: the only
+    prepped values that differ (padding rows the kernel zeroes where the
+    XLA compare injects) land in the dropped scatter segment.
     """
-    from repro.core.distributed import lane_probe_block
+    from repro.core.distributed import lane_level_xla, lane_probe_block
     from repro.utils.jaxcompat import shard_map
 
     edge_chunk = 2048
@@ -273,6 +282,7 @@ def probe_lanes_ring(
         # src_l/dst_l [1, S, E]; w_l [rows]; pool_l/plen_l replicated
         me = jax.lax.axis_index("model")
         row0 = me * rows
+        w = q * wq
         # live edges per resident bucket: sentinel slots (src == rows) are
         # a suffix of every bucket by construction (partition_edges_2d
         # packs each bucket's live prefix first)
@@ -284,9 +294,37 @@ def probe_lanes_ring(
                                    counts_l=counts_l, edge_chunk=ch)
             return acc * w_l[:, None]
 
+        if use_kernel:
+            from repro.kernels.lane_probe.ops import lane_probe_level
+
+            ident = row0 + jax.lax.broadcasted_iota(
+                jnp.int32, (rows, 1), 0
+            )  # own-row identity "neighbors" (global ids)
+            ones = jnp.ones((rows,), jnp.float32)
+            no_excl = jnp.full((w,), sentinel, jnp.int32)
+            rid = jax.lax.broadcasted_iota(jnp.int32, (rows, w), 0) + row0
+
+            def level_fn(scores, total, fin, u_p, u_prev, thr):
+                # fused prologue: deposit + inject + prune, identity gather
+                # over the resident block (table IS the block -> tab0 = 0);
+                # exclusion is deferred past the ring push
+                prep, total = lane_probe_level(
+                    ident, ones, scores, scores, total,
+                    fin, u_p, no_excl, thr,
+                    row0=row0, tab0=0, n_live=sentinel,
+                    prune=eps_p > 0.0,
+                )
+                scores = push_block(prep)
+                scores = jnp.where(rid == u_prev[None, :], 0.0, scores)
+                return scores, total
+        else:
+            level_fn = lane_level_xla(
+                push_block, row0=row0, rows=rows, w=w, eps_p=eps_p
+            )
+
         return lane_probe_block(
-            push_block, pool_l, plen_l,
-            row0=row0, rows=rows, q=q, wq=wq, n_r=n_r,
+            level_fn, pool_l, plen_l,
+            rows=rows, q=q, wq=wq, n_r=n_r,
             max_len=max_len, sqrt_c=sqrt_c, eps_p=eps_p, sentinel=sentinel,
         )
 

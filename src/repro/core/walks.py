@@ -29,21 +29,39 @@ from repro.graph.structs import EllGraph
 Array = jax.Array
 
 
-def _sample_walks_impl(
+def walk_uniforms(
     key: Array,
-    eg: EllGraph,
-    u: Array,
     *,
     n_r: int,
     max_len: int,
     sqrt_c: float,
-) -> Array:
-    """Trace-level body shared by the single- and multi-query entry points."""
-    n = eg.n
+) -> tuple[Array, Array]:
+    """Draw the per-(walk, step) randomness for ``n_r`` walks up front.
+
+    Returns ``(cont, pick)``, both [n_r, max_len - 1]: the continue/stop
+    coins (bool, continue w.p. sqrt(c)) and the neighbor-pick uniforms.
+    Walks are row-independent given these draws, so any row subset can be
+    materialized separately (``walks_from_uniforms``) and still be
+    bit-identical to a full-pool ``sample_walks`` call — the property the
+    pipelined serve path (DESIGN.md §3) relies on to overlap tail-walk
+    sampling with the first push level.
+    """
     k_cont, k_step = jax.random.split(key)
-    # continue/stop coin per (walk, step): continue w.p. sqrt(c)
     cont = jax.random.uniform(k_cont, (n_r, max_len - 1)) < sqrt_c
     pick = jax.random.uniform(k_step, (n_r, max_len - 1))
+    return cont, pick
+
+
+def walks_from_uniforms(
+    eg: EllGraph,
+    u: Array,
+    cont: Array,
+    pick: Array,
+) -> Array:
+    """Materialize walks [R, max_len] from pre-drawn uniforms (any row
+    subset of a ``walk_uniforms`` batch)."""
+    n = eg.n
+    n_r = cont.shape[0]
 
     def step(carry, inputs):
         cur, alive = carry  # cur: [n_r] current node; alive: [n_r] bool
@@ -62,6 +80,20 @@ def _sample_walks_impl(
     )
     walks = jnp.concatenate([u_col[:, None], cols.T], axis=1)
     return walks.astype(jnp.int32)
+
+
+def _sample_walks_impl(
+    key: Array,
+    eg: EllGraph,
+    u: Array,
+    *,
+    n_r: int,
+    max_len: int,
+    sqrt_c: float,
+) -> Array:
+    """Trace-level body shared by the single- and multi-query entry points."""
+    cont, pick = walk_uniforms(key, n_r=n_r, max_len=max_len, sqrt_c=sqrt_c)
+    return walks_from_uniforms(eg, u, cont, pick)
 
 
 @partial(jax.jit, static_argnames=("n_r", "max_len", "sqrt_c"))

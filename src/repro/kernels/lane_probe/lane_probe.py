@@ -1,0 +1,180 @@
+"""Pallas TPU kernel: one fused compacted-lane probe level on-chip.
+
+The compacted telescoped probe (DESIGN.md §3/§10) runs, per level and per
+lane column c:
+
+    deposit   total[:, c] += scores[:, c]            if fin[c]
+    inject    scores[u_p[c], c] += 1                  (sentinel = no-op)
+    prune     scores[:, c] = 0 where <= thr[c]
+    push      out[v, c] = w[v] * sum_k scores[nbrs[v, k], c]
+    exclude   out[u_prev[c], c] = 0
+
+The XLA lowering issues these as five separate scatter/gather/select HLOs,
+each streaming the whole [rows, W] block through HBM.  This kernel fuses
+the level into ONE pass over the output block: the deposit is a block read
+of the pre-level scores, and inject/prune/exclude become per-gathered-element
+arithmetic folded into the SpMM gather — the injected unit mass is
+reconstructed at gather time from ``u_p`` (the gather address equals the
+injection address), so no scatter ever materializes.
+
+TPU mapping (same shape discipline as ``kernels/spmm_ell``):
+* output rows tile in blocks of BN; the lane-column dim W rides the 128-wide
+  lane dimension (the op wrapper pads W up);
+* the frontier ``table`` stays whole (ANY/HBM space) and is gathered
+  row-by-row with dynamic slices;
+* the per-column lane state (fin/u_p/u_prev/thr) is tiny and replicated to
+  every block;
+* accumulation is always fp32; ``table``/``total`` may be stored bf16
+  (bf16-storage / fp32-accumulate option) — gathered rows are upcast before
+  the inject/prune arithmetic and the outputs cast back on store.
+
+Reduction-order contract: each output row reduces its K gathered lanes with
+a single ``jnp.sum`` over a stacked [K, W] tile — the same reduction XLA
+emits for ``push_ell_padded``'s ``gathered.sum(axis=1)``.  That (not a
+serial fori-loop accumulate, which XLA reassociates differently on CPU)
+is what makes the fused path bitwise-equal to the XLA ELL lane probe in
+fp32 (tests/test_lane_kernel.py).
+
+Addressing: neighbor ids are GLOBAL node ids.  ``offs = [row0, tab0]`` maps
+them into the table: global id x lives at table row ``x - row0 + tab0``.
+The local/spmd paths gather from a full frontier (``tab0 == row0``, so the
+address is the id itself); the ring path gathers from its own [rows, W]
+block (``tab0 == 0``).  Ids >= n_live (ELL sentinel, mesh padding rows)
+contribute exact zeros — value masking replaces the dump-row zeroing of the
+XLA path, so the kernel needs no [n + 1] buffer convention.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Array = jax.Array
+
+
+def _kernel(
+    nbrs_ref,    # int32 [bn, K] global neighbor ids for this row block
+    w_ref,       # f32   [bn]    push weights (already scaled by sqrt_c)
+    offs_ref,    # int32 [2]     (row0, tab0)
+    fin_ref,     # int32 [W]     1 where the column deposits this level
+    up_ref,      # int32 [W]     injection node id (global; >= n_live: no-op)
+    uprev_ref,   # int32 [W]     exclusion node id (global; >= n_live: no-op)
+    thr_ref,     # f32   [W]     per-column prune threshold
+    table_ref,   # [T, W]        gather source (full frontier or own block)
+    dep_ref,     # [bn, W]       pre-level scores of this block (deposit src)
+    total_ref,   # [bn, W]       per-column accumulator block
+    out_ref,     # [bn, W]       pushed scores out
+    tot_ref,     # [bn, W]       updated accumulator out
+    *,
+    bn: int,
+    k_slots: int,
+    n_live: int,
+    table_rows: int,
+    prune: bool,
+):
+    pid = pl.program_id(0)
+    row0 = offs_ref[0]
+    tab0 = offs_ref[1]
+    fin = fin_ref[...] != 0
+    u_p = up_ref[...]
+    u_prev = uprev_ref[...]
+    thr = thr_ref[...]
+    w_cols = out_ref.shape[1]
+
+    # deposit: fp32 accumulate, storage-dtype store
+    tot = total_ref[...].astype(jnp.float32)
+    dep = dep_ref[...].astype(jnp.float32)
+    tot_ref[...] = (tot + jnp.where(fin[None, :], dep, 0.0)).astype(
+        tot_ref.dtype
+    )
+
+    base_g = row0 + pid * bn  # global node id of this block's row 0
+
+    def row_body(i, acc):
+        def k_body(k, stack):
+            idx = nbrs_ref[i, k]
+            addr = jnp.clip(idx - row0 + tab0, 0, table_rows - 1)
+            row = table_ref[pl.dslice(addr, 1), :][0].astype(jnp.float32)
+            # deposit-zeroing + injection, per gathered element
+            eff = jnp.where(fin, 0.0, row) + (u_p == idx).astype(jnp.float32)
+            if prune:
+                eff = jnp.where(eff > thr, eff, 0.0)
+            # sentinel / padding ids contribute exact zeros
+            eff = jnp.where(idx >= n_live, 0.0, eff)
+            return stack.at[k, :].set(eff)
+
+        stack = jax.lax.fori_loop(
+            0, k_slots, k_body, jnp.zeros((k_slots, w_cols), jnp.float32)
+        )
+        # single jnp.sum over the K stack == XLA's gathered.sum(axis=1)
+        row_out = stack.sum(axis=0) * w_ref[i]
+        row_out = jnp.where(u_prev == base_g + i, 0.0, row_out)
+        return acc.at[i, :].set(row_out)
+
+    acc = jax.lax.fori_loop(
+        0, bn, row_body, jnp.zeros((bn, w_cols), jnp.float32)
+    )
+    out_ref[...] = acc.astype(out_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_live", "prune", "block_rows", "interpret"),
+)
+def lane_probe_pallas(
+    nbrs: Array,     # int32 [R, K]
+    weights: Array,  # f32 [R]
+    offs: Array,     # int32 [2] = (row0, tab0); may be traced under shard_map
+    fin: Array,      # int32 [W]
+    u_p: Array,      # int32 [W]
+    u_prev: Array,   # int32 [W]
+    thr: Array,      # f32 [W]
+    table: Array,    # [T, W] storage dtype (f32 or bf16)
+    dep: Array,      # [R, W] same dtype as table
+    total: Array,    # [R, W] same dtype as table
+    *,
+    n_live: int,
+    prune: bool,
+    block_rows: int = 128,
+    interpret: bool = True,
+) -> tuple[Array, Array]:
+    R, K = nbrs.shape
+    T, W = table.shape
+    assert R % block_rows == 0, f"R={R} must tile by block_rows={block_rows}"
+    grid = (R // block_rows,)
+    kernel = functools.partial(
+        _kernel,
+        bn=block_rows,
+        k_slots=K,
+        n_live=n_live,
+        table_rows=T,
+        prune=prune,
+    )
+    out, tot = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, K), lambda i: (i, 0)),  # nbrs tile
+            pl.BlockSpec((block_rows,), lambda i: (i,)),      # weights tile
+            pl.BlockSpec((2,), lambda i: (0,)),               # offs
+            pl.BlockSpec((W,), lambda i: (0,)),               # fin
+            pl.BlockSpec((W,), lambda i: (0,)),               # u_p
+            pl.BlockSpec((W,), lambda i: (0,)),               # u_prev
+            pl.BlockSpec((W,), lambda i: (0,)),               # thr
+            pl.BlockSpec((T, W), lambda i: (0, 0)),           # full table
+            pl.BlockSpec((block_rows, W), lambda i: (i, 0)),  # deposit tile
+            pl.BlockSpec((block_rows, W), lambda i: (i, 0)),  # total tile
+        ],
+        out_specs=[
+            pl.BlockSpec((block_rows, W), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, W), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((R, W), table.dtype),
+            jax.ShapeDtypeStruct((R, W), total.dtype),
+        ],
+        interpret=interpret,
+    )(nbrs, weights, offs, fin, u_p, u_prev, thr, table, dep, total)
+    return out, tot

@@ -1,0 +1,108 @@
+"""Public op: one fused compacted-lane probe level with kernel dispatch.
+
+``lane_probe_level`` executes deposit + inject + prune + ELL push +
+exclusion for one level of the compacted lane schedule (DESIGN.md §3/§10)
+in a single fused pass.  The wrapper owns the TPU shape discipline so
+callers never see it:
+
+* rows pad up to the block size (sentinel neighbor ids, zero weights —
+  padded rows compute exact zeros and are sliced off);
+* lane columns pad up to the 128-wide lane dimension (sentinel u_p/u_prev,
+  ``fin`` false, zero thresholds — padded columns are no-ops);
+* ``fin`` booleans widen to int32 for the kernel operand;
+* ``row0``/``tab0`` (global id of output row 0 / its table row) may be
+  python ints or traced values (the sharded paths call this inside
+  shard_map with a per-shard ``row0``).
+
+Storage dtype follows ``table`` (float32, or bfloat16 for the bf16-storage
+/ fp32-accumulate option); ``dep``/``total`` must match.  Runs the Pallas
+kernel natively on TPU and in interpret mode elsewhere, keeping the path
+CI-testable on CPU.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.lane_probe.lane_probe import lane_probe_pallas
+
+Array = jax.Array
+
+_LANE = 128  # TPU lane width: pad W up to a multiple of this
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_rows(r: int, block_rows: int) -> tuple[int, int]:
+    """(padded_rows, block) — rows pad to a sublane multiple, large row
+    counts tile by ``block_rows``."""
+    rp = -(-r // 8) * 8
+    if rp >= block_rows:
+        return -(-rp // block_rows) * block_rows, block_rows
+    return rp, rp
+
+
+def lane_probe_level(
+    nbrs: Array,     # int32 [R, K] global in-neighbor ids (sentinel >= n_live)
+    weights: Array,  # f32 [R] push weights (inv_in_deg * sqrt_c)
+    table: Array,    # [T, W] gather source (full frontier or own block)
+    dep: Array,      # [R, W] pre-level scores of these rows (deposit source)
+    total: Array,    # [R, W] per-column accumulator
+    fin: Array,      # bool [W] columns depositing this level
+    u_p: Array,      # int32 [W] injection ids (>= n_live: no-op)
+    u_prev: Array,   # int32 [W] exclusion ids (>= n_live: no-op)
+    thr: Array,      # f32 [W] prune thresholds (ignored unless ``prune``)
+    *,
+    row0,
+    tab0,
+    n_live: int,
+    prune: bool,
+    block_rows: int = 128,
+    interpret: bool | None = None,
+) -> tuple[Array, Array]:
+    """Returns ``(scores_out [R, W], total_out [R, W])`` for one level."""
+    r, _ = nbrs.shape
+    w = table.shape[1]
+    if interpret is None:
+        interpret = not _on_tpu()
+
+    rp, bn = _pad_rows(r, block_rows)
+    wp = -(-w // _LANE) * _LANE
+    dtype = table.dtype
+
+    if rp != r:
+        pad = rp - r
+        nbrs = jnp.concatenate(
+            [nbrs, jnp.full((pad, nbrs.shape[1]), n_live, jnp.int32)], axis=0
+        )
+        weights = jnp.concatenate([weights, jnp.zeros(pad, weights.dtype)])
+        dep = jnp.concatenate([dep, jnp.zeros((pad, w), dtype)], axis=0)
+        total = jnp.concatenate([total, jnp.zeros((pad, w), dtype)], axis=0)
+    if wp != w:
+        pad = wp - w
+        sent = jnp.full(pad, n_live, jnp.int32)
+        fin = jnp.concatenate([fin.astype(jnp.int32), jnp.zeros(pad, jnp.int32)])
+        u_p = jnp.concatenate([u_p, sent])
+        u_prev = jnp.concatenate([u_prev, sent])
+        thr = jnp.concatenate([thr, jnp.zeros(pad, thr.dtype)])
+        table = jnp.concatenate(
+            [table, jnp.zeros((table.shape[0], pad), dtype)], axis=1
+        )
+        dep = jnp.concatenate([dep, jnp.zeros((rp, pad), dtype)], axis=1)
+        total = jnp.concatenate([total, jnp.zeros((rp, pad), dtype)], axis=1)
+    else:
+        fin = fin.astype(jnp.int32)
+
+    offs = jnp.stack(
+        [jnp.asarray(row0, jnp.int32), jnp.asarray(tab0, jnp.int32)]
+    )
+    out, tot = lane_probe_pallas(
+        nbrs, weights, offs, fin, u_p, u_prev, thr, table, dep, total,
+        n_live=n_live, prune=prune, block_rows=bn, interpret=interpret,
+    )
+    if rp != r or wp != w:
+        out = out[:r, :w]
+        tot = tot[:r, :w]
+    return out, tot

@@ -1,0 +1,58 @@
+"""jnp oracle for the fused lane-probe level kernel.
+
+Mirrors ``lane_probe.py`` element-for-element, INCLUDING the reduction
+order: the K gathered neighbor lanes reduce through one ``jnp.sum`` over
+the stacked axis — the same reduction ``push_ell_padded`` lowers to — so
+the oracle, the kernel (interpret mode) and the XLA ELL lane probe are
+mutually bitwise-equal in fp32.  Used by tests and as the roofline
+comparison baseline in ``benchmarks/bench_kernels.py``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def lane_probe_level_ref(
+    nbrs: Array,     # int32 [R, K] global neighbor ids
+    weights: Array,  # f32 [R]
+    table: Array,    # [T, W] gather source (f32 or bf16 storage)
+    dep: Array,      # [R, W] pre-level scores of this block
+    total: Array,    # [R, W] accumulator block
+    fin: Array,      # bool/int32 [W]
+    u_p: Array,      # int32 [W]
+    u_prev: Array,   # int32 [W]
+    thr: Array,      # f32 [W]
+    *,
+    row0,
+    tab0,
+    n_live: int,
+    prune: bool,
+) -> tuple[Array, Array]:
+    R = nbrs.shape[0]
+    T = table.shape[0]
+    fin = fin.astype(bool)
+    row0 = jnp.asarray(row0, jnp.int32)
+    tab0 = jnp.asarray(tab0, jnp.int32)
+
+    # deposit: fp32 accumulate, storage-dtype store
+    tot = total.astype(jnp.float32) + jnp.where(
+        fin[None, :], dep.astype(jnp.float32), 0.0
+    )
+
+    addr = jnp.clip(nbrs - row0 + tab0, 0, T - 1)  # [R, K]
+    rows = table[addr].astype(jnp.float32)  # [R, K, W]
+    idx = nbrs[:, :, None]
+    eff = jnp.where(fin[None, None, :], 0.0, rows) + (
+        idx == u_p[None, None, :]
+    ).astype(jnp.float32)
+    if prune:
+        eff = jnp.where(eff > thr[None, None, :], eff, 0.0)
+    eff = jnp.where(idx >= n_live, 0.0, eff)
+
+    out = eff.sum(axis=1) * weights[:, None]
+    gids = row0 + jnp.arange(R, dtype=jnp.int32)
+    out = jnp.where(u_prev[None, :] == gids[:, None], 0.0, out)
+    return out.astype(table.dtype), tot.astype(total.dtype)

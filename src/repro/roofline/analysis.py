@@ -176,6 +176,8 @@ def analyze(
     model_flops: float, hw: dict,
 ) -> RooflineReport:
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):  # older jax: one dict per program
+        ca = ca[0] if ca else {}
     flops = float(ca.get("flops", 0.0))
     byts = float(ca.get("bytes accessed", 0.0))
     colls = parse_collectives(compiled.as_text())

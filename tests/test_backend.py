@@ -250,8 +250,12 @@ def test_sharded_rejects_bad_geometry(handle):
         ShardedBackend(handle.shard(shards=3), params=p)  # 1 device
     with pytest.raises(ValueError, match="probe"):
         ShardedBackend(handle.shard(shards=1), params=p, probe="nope")
-    with pytest.raises(ValueError, match="use_kernel"):
-        ShardedBackend(handle.shard(shards=1), params=p, use_kernel=True)
+    with pytest.raises(ValueError, match="frontier_dtype"):
+        ShardedBackend(handle.shard(shards=1), params=p,
+                       frontier_dtype="float16")
+    # use_kernel=True is a working mesh path now (PR 10), not a rejection
+    be = ShardedBackend(handle.shard(shards=1), params=p, use_kernel=True)
+    assert be.use_kernel is True
     with pytest.raises(ValueError, match="model"):
         from repro.utils.jaxcompat import make_mesh
 
